@@ -1,0 +1,28 @@
+"""Alg. 1 behaviour: GA fitness convergence trace (MobileNet-v3 / SIMBA)
+and evaluation-cache effectiveness."""
+from __future__ import annotations
+
+from repro.core import GAConfig, run_ga
+from repro.costmodel import SIMBA, Evaluator
+from repro.workloads import mobilenet_v3_large
+
+from benchmarks.common import emit, time_call
+
+
+def run(full: bool = False):
+    g = mobilenet_v3_large()
+    ev = Evaluator(g, SIMBA)
+    ga = GAConfig(generations=500 if full else 100, seed=0)
+    us, res = time_call(lambda: run_ga(g, ev, ga), repeats=1)
+    h = res.history
+    marks = {0: h[0], len(h) // 4: h[len(h) // 4], len(h) // 2: h[len(h) // 2],
+             len(h) - 1: h[-1]}
+    trace = ";".join(f"g{k}={v:.3f}" for k, v in sorted(marks.items()))
+    emit("ga_convergence_fitness", us, trace)
+    emit("ga_evaluations", 0.0,
+         f"unique_states={res.evaluations};"
+         f"group_cache={len(ev._group_cache)}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,70 @@
+"""Kernel micro-benchmarks.
+
+CPU wall-times (XLA-compiled reference paths; Pallas interpret mode is a
+correctness vehicle, not a perf path) — the TPU-relevant numbers are the
+analytic VMEM working sets per BlockSpec, emitted as `derived`."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.models.attention import attention
+
+from benchmarks.common import emit, time_call
+
+
+def _vmem_kb(*tiles):
+    return sum(4 * t for t in tiles) / 1024.0
+
+
+def run(full: bool = False):
+    key = jax.random.PRNGKey(0)
+    B, S, Hq, Hkv, D = 1, 1024, 8, 2, 128
+    q = jax.random.normal(key, (B, S, Hq, D), jnp.float32)
+    k = jax.random.normal(key, (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(key, (B, S, Hkv, D), jnp.float32)
+    pos = jnp.arange(S)
+
+    f_block = jax.jit(lambda q, k, v: attention(
+        q, k, v, pos, pos, impl="blockwise", block_kv=256))
+    us, _ = time_call(lambda: jax.block_until_ready(f_block(q, k, v)))
+    # flash kernel VMEM: q-tile + k-tile + v-tile + acc + (m, l)
+    vm = _vmem_kb(128 * D, 128 * D, 128 * D, 128 * D, 128, 128)
+    emit("kernel_flash_attn_1k_xla_blockwise", us,
+         f"vmem_tile_kb={vm:.0f};block=(128,128)")
+
+    f_dense = jax.jit(lambda q, k, v: attention(q, k, v, pos, pos,
+                                                impl="dense"))
+    us, _ = time_call(lambda: jax.block_until_ready(f_dense(q, k, v)))
+    emit("kernel_attn_1k_xla_dense", us, "baseline")
+
+    B, S, Di, N = 1, 512, 256, 16
+    da = jax.random.uniform(key, (B, S, Di, N), minval=0.5, maxval=0.99)
+    dbx = jax.random.normal(key, (B, S, Di, N)) * 0.1
+    c = jax.random.normal(key, (B, S, N))
+    f_m = jax.jit(mamba_scan_ref)
+    us, _ = time_call(lambda: jax.block_until_ready(f_m(da, dbx, c)))
+    vm = _vmem_kb(128 * 128 * N * 2, 128 * N, 128 * 128)
+    emit("kernel_mamba_scan_512", us, f"vmem_tile_kb={vm:.0f};block=(128,128)")
+
+    a = jax.random.uniform(key, (1, 2048, 2560), minval=0.5, maxval=0.999)
+    b = jax.random.normal(key, (1, 2048, 2560))
+    f_r = jax.jit(rglru_scan_ref)
+    us, _ = time_call(lambda: jax.block_until_ready(f_r(a, b)))
+    emit("kernel_rglru_scan_2k", us,
+         f"vmem_tile_kb={_vmem_kb(256 * 128 * 2, 128):.0f};block=(128,256)")
+
+    x = jax.random.normal(key, (4096, 4096))
+    w = jnp.ones((4096,))
+    f_n = jax.jit(rmsnorm_ref)
+    us, _ = time_call(lambda: jax.block_until_ready(f_n(x, w)))
+    emit("kernel_rmsnorm_4kx4k", us,
+         f"vmem_tile_kb={_vmem_kb(256 * 4096):.0f};block_rows=256")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,139 @@
+"""§Roofline: build the 40-cell roofline table from the dry-run artifacts.
+
+Reads ``artifacts/dryrun/*.json``, derives the three terms per (arch x
+shape) on the single-pod mesh, identifies the dominant bottleneck, computes
+MODEL_FLOPS / HLO_FLOPs, and writes ``artifacts/roofline.csv`` (consumed by
+EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.roofline.analysis import HW, roofline_from_artifact
+
+from benchmarks.common import emit
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                       "dryrun")
+OUT_CSV = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                       "roofline.csv")
+
+
+def model_flops(art) -> float:
+    """6*N*D (train) / 2*N*D (serving) with N = active params.
+
+    Serving shapes exclude the embedding/unembedding parameters: the decode/
+    prefill steps compute logits for one position only, so the vocab matmul
+    contributes ~nothing per token (prefill) or a constant (decode)."""
+    from repro.configs import get_config
+    n = art["n_active_params"]
+    toks = art["tokens"]
+    if art["shape"].startswith("train"):
+        return 6.0 * n * toks
+    cfg = get_config(art["arch"])
+    emb = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    return 2.0 * max(n - emb, 1) * toks
+
+
+def analytic_memory_s(art) -> float:
+    """Analytic per-chip HBM seconds (the HLO-bytes term is an unfused
+    upper bound — see DESIGN.md §6.5).  Train: the tpu_model estimate at the
+    artifact's remat/microbatch setting.  Serving: params read once per step
+    + KV/state-cache traffic."""
+    from repro.configs import SHAPES, get_config
+    from repro.costmodel.tpu_model import TpuSchedule, estimate
+    from repro.roofline.analysis import HW
+    cfg = get_config(art["arch"])
+    shape = SHAPES[art["shape"]]
+    chips = art["chips"]
+    hw = HW()
+    if shape.kind == "train":
+        sched = TpuSchedule(remat=art.get("remat", "none"),
+                            microbatches=art.get("microbatches", 1))
+        return estimate(cfg, shape, sched, chips=chips,
+                        data_par=16, model_par=16, hw=hw).memory_s
+    params_b = 2 * cfg.n_params / chips
+    if shape.kind == "decode":
+        hd, kv = cfg.resolved_head_dim, cfg.n_kv_heads
+        attn_layers = sum(1 for k in cfg.layer_kinds() if k.startswith("attn"))
+        cache_b = (attn_layers * 2 * shape.global_batch * shape.seq_len
+                   * kv * hd * 2) / chips
+        return (params_b + cache_b) / hw.hbm_bw
+    # prefill: params + ~14 activation tensors of d_model per token per layer
+    toks = shape.global_batch * shape.seq_len / chips * 16  # model axis shares
+    act_b = 14 * cfg.d_model * 2 * toks * cfg.n_layers / 16
+    return (params_b + act_b) / hw.hbm_bw
+
+
+def suggestion(dom, art) -> str:
+    if dom == "compute":
+        return ("raise MXU utilization: larger per-chip batch or fewer "
+                "remat recomputes")
+    if dom == "memory":
+        return ("cut HBM traffic: fuse/remat fewer saves, larger microbatch "
+                "reuse, bf16 collectives")
+    return ("cut collective bytes: wider TP blocks per all-reduce, "
+            "grad compression, overlap with compute")
+
+
+def run(full: bool = False):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(ART_DIR, "*.json"))):
+        # skip perf-iteration variants (4th "__"-separated component = tag)
+        if len(os.path.basename(p)[:-5].split("__")) != 3:
+            continue
+        art = json.load(open(p))
+        if art.get("mesh") != "single":
+            continue
+        cell = f"{art['arch']}__{art['shape']}"
+        if art["status"] == "skipped":
+            rows.append({"cell": cell, "status": "skipped",
+                         "reason": art.get("reason", "")})
+            continue
+        if art["status"] != "ok":
+            rows.append({"cell": cell, "status": "failed"})
+            continue
+        t = roofline_from_artifact(art)
+        mf = model_flops(art)
+        hlo_global = t.flops * art["chips"]
+        mem_an = analytic_memory_s(art)
+        terms = {"compute": t.compute_s, "memory": mem_an,
+                 "collective": t.collective_s}
+        dominant = max(terms, key=terms.get)
+        bound = max(terms.values())
+        rows.append({
+            "cell": cell, "status": "ok",
+            "compute_s": f"{t.compute_s:.4e}",
+            "memory_s_hlo_ub": f"{t.memory_s:.4e}",
+            "memory_s_analytic": f"{mem_an:.4e}",
+            "collective_s": f"{t.collective_s:.4e}",
+            "dominant": dominant,
+            "model_flops": f"{mf:.4e}",
+            "hlo_flops_global": f"{hlo_global:.4e}",
+            "useful_ratio": f"{mf / hlo_global:.3f}" if hlo_global else "0",
+            "step_bound_s": f"{bound:.4e}",
+            "roofline_fraction": f"{terms['compute'] / bound:.3f}"
+            if bound else "0",
+            "next_action": suggestion(dominant, art),
+        })
+        emit(f"roofline_{cell}", 0.0,
+             f"dom={dominant};cmp={t.compute_s:.2e}s;"
+             f"mem_an={mem_an:.2e}s;mem_ub={t.memory_s:.2e}s;"
+             f"coll={t.collective_s:.2e}s;"
+             f"useful={rows[-1]['useful_ratio']};"
+             f"roofline_frac={rows[-1]['roofline_fraction']}")
+    keys = ["cell", "status", "compute_s", "memory_s_hlo_ub",
+            "memory_s_analytic", "collective_s", "dominant", "model_flops",
+            "hlo_flops_global", "useful_ratio", "step_bound_s",
+            "roofline_fraction", "next_action", "reason"]
+    with open(OUT_CSV, "w") as f:
+        f.write(",".join(keys) + "\n")
+        for r in rows:
+            f.write(",".join(str(r.get(k, "")).replace(",", ";")
+                             for k in keys) + "\n")
+    emit("roofline_table_rows", 0.0, f"rows={len(rows)};csv={OUT_CSV}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` restores the
+paper's GA settings (P=100, N=10, G=500); the default uses fewer
+generations for CPU wall-time (EXPERIMENTS.md records which setting
+produced each number).
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper GA settings (slower)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated benchmark names to run")
+    args = ap.parse_args()
+
+    from benchmarks import (fig7_receptive_field, fig9_resnet50_groups,
+                            fig10_workloads, fig11_repartition,
+                            ga_convergence, kernel_bench, roofline_table,
+                            tpu_schedule_bench)
+    suites = {
+        "fig7": fig7_receptive_field,
+        "fig9": fig9_resnet50_groups,
+        "fig10": fig10_workloads,
+        "fig11": fig11_repartition,
+        "ga": ga_convergence,
+        "kernels": kernel_bench,
+        "roofline": roofline_table,
+        "tpu_ga": tpu_schedule_bench,
+    }
+    selected = [s.strip() for s in args.only.split(",") if s.strip()] \
+        or list(suites)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in selected:
+        try:
+            suites[name].run(full=args.full)
+        except Exception:
+            failures += 1
+            print(f"{name}_FAILED,0,{traceback.format_exc(limit=1)!r}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,38 @@
+"""Beyond-paper: the TPU scheduling GA on the three hillclimb cells —
+predicted step-time / EDP / HBM residency, baseline vs GA-selected schedule
+(validated against compiled artifacts in EXPERIMENTS.md §Perf)."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.core.ga import GAConfig
+from repro.core.tpu_ga import optimize_tpu_schedule
+
+from benchmarks.common import emit, time_call
+
+CELLS = [
+    ("dbrx-132b", "train_4k"),
+    ("llama4-maverick-400b-a17b", "train_4k"),
+    ("qwen2-7b", "train_4k"),
+]
+
+
+def run(full: bool = False):
+    for arch, shape_name in CELLS:
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        ga = GAConfig.fast(generations=40 if full else 20)
+        us, res = time_call(
+            lambda: optimize_tpu_schedule(cfg, shape, ga=ga), repeats=1)
+        b, o = res.baseline_cost, res.best_cost
+        fits = "fits" if b.hbm_resident_bytes <= 16e9 else "OOM"
+        emit(f"tpu_ga_{arch}_{shape_name}", us,
+             f"baseline={fits}@{b.hbm_resident_bytes / 1e9:.1f}GB;"
+             f"best=remat:{res.best.remat}/mb:{res.best.microbatches}/"
+             f"gc:{res.best.grad_compression};"
+             f"best_step={o.step_s * 1e3:.0f}ms;dom={o.dominant};"
+             f"best_resident={o.hbm_resident_bytes / 1e9:.1f}GB")
+
+
+if __name__ == "__main__":
+    run()

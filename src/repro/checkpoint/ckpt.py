@@ -1,0 +1,206 @@
+"""Fault-tolerant checkpointing: atomic, checksummed, async, mesh-agnostic.
+
+Design (what a 1000-node deployment needs, expressed single-host here):
+
+* **Atomicity** — write to ``step_N.tmp/``, fsync, then ``rename`` to
+  ``step_N/``; a crash mid-save never corrupts the latest checkpoint.
+* **Integrity** — every tensor buffer carries a crc32; load verifies.
+* **Async** — ``CheckpointManager.save_async`` snapshots to host memory
+  (device_get) synchronously, then writes on a background thread so the
+  train loop keeps stepping (overlap of I/O with compute).
+* **Mesh-agnostic / elastic** — tensors are saved *unsharded logical*
+  (gathered via device_get); on load they are re-placed under whatever mesh/
+  sharding the restarting job uses (possibly a different pod count), which is
+  the resharding path elastic scaling needs.  At real scale the same layout
+  works with per-host shard files; the manifest already records per-leaf
+  shapes/dtypes.
+* **Retention** — keep the newest K checkpoints, delete older ones only
+  after the newer save committed.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_MANIFEST = "manifest.json"
+
+# dtypes numpy's .npy format cannot round-trip natively: stored as raw
+# integer views, logical dtype recorded in the manifest
+_EXOTIC_STORE = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+                 "float8_e5m2": np.uint8}
+
+
+def _to_storable(arr: np.ndarray):
+    name = arr.dtype.name
+    if name in _EXOTIC_STORE:
+        return arr.view(_EXOTIC_STORE[name]), name
+    return arr, name
+
+
+def _from_storable(arr: np.ndarray, logical_dtype: str):
+    if logical_dtype in _EXOTIC_STORE:
+        import ml_dtypes
+        return arr.view(getattr(ml_dtypes, logical_dtype))
+    return arr
+
+
+def _flatten(tree) -> Tuple[List[Tuple[str, Any]], Any]:
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)
+    flat = [("/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path), leaf)
+            for path, leaf in leaves_with_paths[0]]
+    return flat, leaves_with_paths[1]
+
+
+def save_checkpoint(directory: str, step: int, tree, *, keep: int = 3,
+                    compress: bool = True) -> str:
+    """Synchronous atomic save (zstd-compressed buffers by default).
+    Returns the committed path."""
+    try:
+        import zstandard
+        cctx = zstandard.ZstdCompressor(level=3) if compress else None
+    except ImportError:                      # pragma: no cover
+        cctx = None
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat, _ = _flatten(tree)
+    manifest = {"step": step, "leaves": []}
+    for i, (name, leaf) in enumerate(flat):
+        arr = np.asarray(jax.device_get(leaf))
+        store, logical = _to_storable(arr)
+        import io
+        buf = io.BytesIO()
+        np.save(buf, store)
+        raw = buf.getvalue()
+        codec = "raw"
+        if cctx is not None:
+            raw = cctx.compress(raw)
+            codec = "zstd"
+        fname = f"leaf_{i:05d}.npy" + (".zst" if codec == "zstd" else "")
+        path = os.path.join(tmp, fname)
+        with open(path, "wb") as f:
+            f.write(raw)
+            f.flush()
+            os.fsync(f.fileno())
+        manifest["leaves"].append({
+            "name": name, "file": fname, "crc32": zlib.crc32(raw),
+            "shape": list(arr.shape), "dtype": logical, "codec": codec})
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _retain(directory, keep)
+    return final
+
+
+def _retain(directory: str, keep: int):
+    steps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")
+             and os.path.exists(os.path.join(directory, d, _MANIFEST))]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, tree_like, step: Optional[int] = None,
+                    shardings=None):
+    """Restore into the structure of ``tree_like``.  ``shardings``: optional
+    matching pytree of NamedSharding — enables cross-mesh resharding (elastic
+    restart on a different topology)."""
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    flat, treedef = _flatten(tree_like)
+    by_name = {m["name"]: m for m in manifest["leaves"]}
+    out = []
+    shard_flat = None
+    if shardings is not None:
+        shard_flat = [s for _, s in _flatten(shardings)[0]]
+    for i, (name, like) in enumerate(flat):
+        meta = by_name[name]
+        fpath = os.path.join(path, meta["file"])
+        with open(fpath, "rb") as f:
+            raw = f.read()
+        if zlib.crc32(raw) != meta["crc32"]:
+            raise IOError(f"checksum mismatch for {name} in {path}")
+        if meta.get("codec") == "zstd":
+            import io
+            import zstandard
+            raw = zstandard.ZstdDecompressor().decompress(raw)
+            arr = np.load(io.BytesIO(raw), allow_pickle=False)
+        else:
+            arr = np.load(os.path.join(path, meta["file"]),
+                          allow_pickle=False)
+        arr = _from_storable(arr, meta["dtype"])
+        if list(arr.shape) != list(np.shape(like)):
+            raise ValueError(f"shape mismatch for {name}: "
+                             f"ckpt {arr.shape} vs expected {np.shape(like)}")
+        if shard_flat is not None:
+            out.append(jax.device_put(arr, shard_flat[i]))
+        else:
+            out.append(jax.device_put(arr.astype(like.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, out), step
+
+
+class CheckpointManager:
+    """Async wrapper: snapshot synchronously, persist in the background."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save_async(self, step: int, tree):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree,
+                                keep=self.keep)
+            except BaseException as e:     # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def latest_step(self) -> Optional[int]:
+        return latest_step(self.directory)
+
+    def restore(self, tree_like, shardings=None):
+        return load_checkpoint(self.directory, tree_like,
+                               shardings=shardings)

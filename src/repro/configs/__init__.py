@@ -1,0 +1,57 @@
+"""Architecture registry: ``--arch <id>`` resolution + per-cell skip rules."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.configs import (chatglm3_6b, dbrx_132b, falcon_mamba_7b,
+                           llama4_maverick_400b, phi_3_vision_4_2b, qwen2_7b,
+                           recurrentgemma_2b, stablelm_1_6b, starcoder2_3b,
+                           whisper_small)
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+
+_MODULES = {
+    "falcon-mamba-7b": falcon_mamba_7b,
+    "chatglm3-6b": chatglm3_6b,
+    "starcoder2-3b": starcoder2_3b,
+    "qwen2-7b": qwen2_7b,
+    "stablelm-1.6b": stablelm_1_6b,
+    "dbrx-132b": dbrx_132b,
+    "llama4-maverick-400b-a17b": llama4_maverick_400b,
+    "phi-3-vision-4.2b": phi_3_vision_4_2b,
+    "recurrentgemma-2b": recurrentgemma_2b,
+    "whisper-small": whisper_small,
+}
+
+ARCH_IDS = list(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _MODULES[arch].CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    return _MODULES[arch].reduced()
+
+
+def cell_skip_reason(arch: str, shape_name: str) -> Optional[str]:
+    """Why a (arch x shape) dry-run cell is skipped, or None if it runs.
+
+    Per the assignment: ``long_500k`` needs a sub-quadratic mixer — skipped
+    for pure full-attention archs (see DESIGN.md §Arch-applicability).
+    """
+    cfg = get_config(arch)
+    if shape_name == "long_500k":
+        sub_quadratic = (cfg.family in ("ssm", "hybrid")
+                         or (cfg.attn_chunk > 0))
+        if not sub_quadratic:
+            return "pure full-attention arch: 500k context is quadratic"
+        if cfg.is_encdec:
+            return "enc-dec decoder beyond published context"
+    return None
+
+
+def iter_cells():
+    """All 40 (arch, shape) cells with skip annotations."""
+    for arch in ARCH_IDS:
+        for sname, shape in SHAPES.items():
+            yield arch, sname, shape, cell_skip_reason(arch, sname)

@@ -1,0 +1,10 @@
+"""The paper's primary contribution: GA-driven interlayer (layer-fusion)
+scheduling over a layer graph, with topological-sort dependency enforcement
+and receptive-field-based capacity checks."""
+from repro.core.fusion import FusionState
+from repro.core.ga import GAConfig, GAResult, run_ga
+from repro.core.graph import Layer, LayerGraph
+from repro.core.schedule import ScheduleResult, optimize
+
+__all__ = ["FusionState", "GAConfig", "GAResult", "run_ga", "Layer",
+           "LayerGraph", "ScheduleResult", "optimize"]

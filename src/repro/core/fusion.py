@@ -1,0 +1,165 @@
+"""Fusion states: the GA genome (paper §III-A, Fig. 8).
+
+A :class:`FusionState` assigns every edge of the layer graph one of two labels:
+
+* **fused**  — the activation tensor on that edge never leaves the chip;
+* **split**  — the tensor is written to DRAM by the producer and read back.
+
+Fused edges induce *fused groups*: weakly-connected components of the graph
+restricted to fused edges (paper: "we represent our network as a computation
+graph, with the fused layers being subgraphs").  A state is *schedulable* only
+if the condensation of the graph by groups is acyclic — otherwise some group
+would need outputs of a group that itself depends on it (can arise from fusing
+across a skip connection while splitting the body, Fig. 8e).
+
+An activation produced inside a group is DRAM-free only if *every* consumer is
+in the same group; if any consumer lives elsewhere the tensor is stored once
+to DRAM for those consumers (partial offload, Fig. 8b).
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+from repro.core.graph import LayerGraph
+from repro.core.toposort import CycleError, topological_sort_edges
+
+Edge = Tuple[str, str]
+
+
+class FusionState:
+    """Immutable fusion genome over ``graph``."""
+
+    __slots__ = ("graph", "fused", "_groups", "_group_of")
+
+    def __init__(self, graph: LayerGraph, fused: FrozenSet[Edge] = frozenset()):
+        all_edges = set(graph.edges)
+        bad = set(fused) - all_edges
+        if bad:
+            raise ValueError(f"fused edges not in graph: {sorted(bad)!r}")
+        self.graph = graph
+        self.fused = frozenset(fused)
+        self._groups: Optional[List[FrozenSet[str]]] = None
+        self._group_of: Optional[Dict[str, int]] = None
+
+    # ---- construction helpers -------------------------------------------------
+    @classmethod
+    def layerwise(cls, graph: LayerGraph) -> "FusionState":
+        """The paper's initial population member: every layer on its own."""
+        return cls(graph, frozenset())
+
+    @classmethod
+    def fully_fused(cls, graph: LayerGraph) -> "FusionState":
+        return cls(graph, frozenset(graph.edges))
+
+    # ---- genome actions (paper Fig. 8b) ----------------------------------------
+    def combine(self, edge: Edge) -> "FusionState":
+        if edge not in set(self.graph.edges):
+            raise ValueError(f"no such edge {edge!r}")
+        return FusionState(self.graph, self.fused | {edge})
+
+    def separate(self, edge: Edge) -> "FusionState":
+        return FusionState(self.graph, self.fused - {edge})
+
+    def mutate(self, rng: random.Random) -> "FusionState":
+        """Paper Alg. 1 line 4: choose an adjacent layer pair, flip its state."""
+        edges = self.graph.edges
+        edge = edges[rng.randrange(len(edges))]
+        return self.separate(edge) if edge in self.fused else self.combine(edge)
+
+    # ---- derived structure ------------------------------------------------------
+    def groups(self) -> List[FrozenSet[str]]:
+        """Weakly-connected components over fused edges, in first-seen order."""
+        if self._groups is not None:
+            return self._groups
+        parent: Dict[str, str] = {n: n for n in self.graph.names}
+
+        def find(x: str) -> str:
+            while parent[x] != x:
+                parent[x] = parent[parent[x]]
+                x = parent[x]
+            return x
+
+        for u, v in self.fused:
+            ru, rv = find(u), find(v)
+            if ru != rv:
+                parent[ru] = rv
+        comp: Dict[str, List[str]] = {}
+        for n in self.graph.names:
+            comp.setdefault(find(n), []).append(n)
+        self._groups = [frozenset(ms) for ms in comp.values()]
+        self._group_of = {}
+        for gi, g in enumerate(self._groups):
+            for n in g:
+                self._group_of[n] = gi
+        return self._groups
+
+    def group_of(self, name: str) -> int:
+        self.groups()
+        assert self._group_of is not None
+        return self._group_of[name]
+
+    def group_edges(self) -> List[Tuple[int, int]]:
+        """Condensation edges (between distinct groups)."""
+        self.groups()
+        out: Set[Tuple[int, int]] = set()
+        for u, v in self.graph.edges:
+            gu, gv = self.group_of(u), self.group_of(v)
+            if gu != gv:
+                out.add((gu, gv))
+        return sorted(out)
+
+    def is_schedulable(self) -> bool:
+        """Condensation must be a DAG (see module docstring)."""
+        gs = self.groups()
+        try:
+            topological_sort_edges(range(len(gs)), self.group_edges())
+            return True
+        except CycleError:
+            return False
+
+    def group_schedule(self, rng: Optional[random.Random] = None
+                       ) -> List[List[str]]:
+        """Topologically-ordered groups, each internally topologically sorted
+        (paper §III-C).  Raises CycleError on unschedulable states."""
+        gs = self.groups()
+        group_order = topological_sort_edges(range(len(gs)), self.group_edges(), rng)
+        sched: List[List[str]] = []
+        for gi in group_order:
+            members = gs[gi]
+            inner = topological_sort_edges(
+                [n for n in self.graph.names if n in members],
+                self.graph.edges, rng)
+            sched.append(inner)
+        return sched
+
+    # ---- DRAM residency ----------------------------------------------------------
+    def tensor_offchip(self, producer: str) -> bool:
+        """True iff ``producer``'s output activation must be stored to DRAM:
+        it has a consumer outside the producer's group, or no consumer at all
+        (a model output)."""
+        succ = self.graph.succs(producer)
+        if not succ:
+            return True
+        g = self.group_of(producer)
+        return any(self.group_of(v) != g for v in succ)
+
+    def offchip_tensors(self) -> List[str]:
+        return [n for n in self.graph.names
+                if self.graph.layers[n].output_size and self.tensor_offchip(n)]
+
+    # ---- identity -------------------------------------------------------------------
+    def key(self) -> FrozenSet[Edge]:
+        return self.fused
+
+    def __eq__(self, other):
+        return isinstance(other, FusionState) and self.fused == other.fused \
+            and self.graph is other.graph
+
+    def __hash__(self):
+        return hash((id(self.graph), self.fused))
+
+    def __repr__(self):
+        return (f"FusionState({self.graph.name}, {len(self.fused)}/"
+                f"{len(self.graph.edges)} edges fused, "
+                f"{len(self.groups())} groups)")

@@ -1,0 +1,128 @@
+"""Genetic algorithm for multilayer scheduling (paper Alg. 1, §III-B).
+
+Faithful to the paper's configuration:
+
+* population ``P = 100`` fusion states, initialized at the layer-by-layer
+  schedule (every edge split);
+* each generation applies ``C`` mutations — choose an adjacent layer pair and
+  *combine* or *separate* it (Fig. 8b) — evaluates the offspring, and adds
+  them to the pool;
+* fitness ``F = Eval_layerwise / Eval_new`` on the chosen objective (EDP by
+  default, "as it provided the most useful information");
+* survivors are the Top-``N = 10`` by fitness **plus a few random** pool
+  members "to ensure we do not quickly converge to a poor local minimum";
+* ``G = 500`` generations.
+
+Evaluation is delegated to a memoizing :class:`repro.costmodel.evaluator.
+Evaluator` (or any object with the same ``fitness``/``evaluate`` protocol,
+e.g. the TPU roofline evaluator in ``repro.core.tpu_ga``), so the engine is
+cost-model agnostic.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.fusion import FusionState
+from repro.core.graph import LayerGraph
+
+
+@dataclass(frozen=True)
+class GAConfig:
+    population: int = 100          # P
+    top_n: int = 10                # N
+    generations: int = 500         # G
+    mutations_per_gen: int = 100   # C (one offspring per mutation)
+    random_survivors: int = 10     # "some random scores"
+    objective: str = "edp"
+    seed: int = 0
+    # beyond-paper: uniform crossover between two parents before mutating
+    # (0.0 = paper-faithful mutation-only operators)
+    crossover_rate: float = 0.0
+
+    @classmethod
+    def paper(cls, **kw) -> "GAConfig":
+        return cls(**kw)
+
+    @classmethod
+    def fast(cls, generations: int = 40, **kw) -> "GAConfig":
+        """CPU-friendly setting for tests/benchmarks; same operators."""
+        return cls(population=40, top_n=8, generations=generations,
+                   mutations_per_gen=40, random_survivors=6, **kw)
+
+
+@dataclass
+class GAResult:
+    best_state: FusionState
+    best_fitness: float
+    history: List[float] = field(default_factory=list)   # best fitness per gen
+    evaluations: int = 0
+
+    @property
+    def generations_run(self) -> int:
+        return len(self.history)
+
+
+def run_ga(graph: LayerGraph, evaluator, config: GAConfig = GAConfig()
+           ) -> GAResult:
+    """Run Alg. 1.  ``evaluator.fitness(state, objective) -> float`` with 0
+    meaning invalid."""
+    rng = random.Random(config.seed)
+    fit_cache: Dict[frozenset, float] = {}
+
+    def fitness(state: FusionState) -> float:
+        key = state.key()
+        if key not in fit_cache:
+            fit_cache[key] = evaluator.fitness(state, config.objective)
+        return fit_cache[key]
+
+    init = FusionState.layerwise(graph)
+    pool: List[Tuple[float, FusionState]] = [(fitness(init), init)]
+    history: List[float] = []
+
+    def crossover(a: FusionState, b: FusionState) -> FusionState:
+        """Uniform crossover on the fused-edge genome (beyond-paper)."""
+        fused = set()
+        for e in graph.edges:
+            src = a.fused if rng.random() < 0.5 else b.fused
+            if e in src:
+                fused.add(e)
+        return FusionState(graph, frozenset(fused))
+
+    for _gen in range(config.generations):
+        parents = [s for _, s in pool]
+        offspring: List[Tuple[float, FusionState]] = []
+        for _ in range(config.mutations_per_gen):
+            parent = parents[rng.randrange(len(parents))]
+            if config.crossover_rate and rng.random() < config.crossover_rate \
+                    and len(parents) > 1:
+                other = parents[rng.randrange(len(parents))]
+                parent = crossover(parent, other)
+            child = parent.mutate(rng)
+            offspring.append((fitness(child), child))
+
+        merged = pool + offspring
+        # dedupe by genome, keep best fitness ordering stable
+        seen = set()
+        unique: List[Tuple[float, FusionState]] = []
+        for f, s in sorted(merged, key=lambda fs: -fs[0]):
+            if s.key() in seen:
+                continue
+            seen.add(s.key())
+            unique.append((f, s))
+
+        top = unique[:config.top_n]
+        rest = unique[config.top_n:]
+        rng.shuffle(rest)
+        pool = top + rest[:config.random_survivors]
+        # keep population topped up with fresh mutants of the best
+        while len(pool) < min(config.population,
+                              config.top_n + config.random_survivors):
+            child = pool[0][1].mutate(rng)
+            pool.append((fitness(child), child))
+        history.append(pool[0][0])
+
+    best_f, best_s = max(pool, key=lambda fs: fs[0])
+    return GAResult(best_state=best_s, best_fitness=best_f,
+                    history=history, evaluations=len(fit_cache))

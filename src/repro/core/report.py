@@ -1,0 +1,50 @@
+"""Schedule reporting: the text analogue of paper Fig. 9.
+
+Renders a GA-optimized fusion schedule as per-group rows (members, tile
+height, buffer occupancy, DRAM traffic, EDP share) so the "adjacent bars
+with the same color are fused" figure has a terminal-friendly counterpart.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.core.fusion import FusionState
+from repro.core.receptive import (group_footprint_words, max_tile_rows,
+                                  receptive_field_hw)
+from repro.core.schedule import ScheduleResult
+from repro.core.toposort import topological_sort_edges
+
+
+def schedule_report(res: ScheduleResult, acc, max_rows: int = 0) -> str:
+    """Multi-line report for a :class:`ScheduleResult` on accelerator
+    ``acc``."""
+    g = res.best_state.graph
+    lines = [
+        f"workload={res.workload} accelerator={res.accelerator}",
+        f"energy x{res.energy_improvement:.3f}  edp x{res.edp_improvement:.3f}"
+        f"  dram x{res.dram_improvement:.3f}  groups={res.best.n_groups}"
+        f"  act-writes {res.baseline.act_write_events}->"
+        f"{res.best.act_write_events}",
+        f"{'group':>5} {'n':>3} {'tile':>4} {'buf%':>5} {'RF':>7}  members",
+    ]
+    sched = res.best_state.group_schedule()
+    shown = 0
+    for gi, members in enumerate(sched):
+        order = topological_sort_edges(
+            [n for n in g.names if n in set(members)], g.edges)
+        multi = len([n for n in order if g.layers[n].macs]) > 1
+        if multi:
+            t = max_tile_rows(g, order, acc.act_buf_words)
+            occ = group_footprint_words(g, order, max(t, 1)) \
+                / acc.act_buf_words * 100
+            rf = "x".join(map(str, receptive_field_hw(g, order)))
+        else:
+            t, occ, rf = 0, 0.0, "-"
+        label = ",".join(order[:4]) + ("..." if len(order) > 4 else "")
+        lines.append(f"{gi:>5} {len(order):>3} {t:>4} {occ:>4.0f}% {rf:>7}"
+                     f"  {label}")
+        shown += 1
+        if max_rows and shown >= max_rows:
+            lines.append(f"  ... ({len(sched) - shown} more groups)")
+            break
+    return "\n".join(lines)

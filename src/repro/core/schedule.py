@@ -1,0 +1,78 @@
+"""High-level API: optimize a workload's interlayer schedule on an accelerator.
+
+This is the paper's end-to-end flow (§III-IV): layerwise baseline -> GA search
+over fusion states -> best multi-layer schedule, reported as improvement
+ratios over the baseline.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from typing import TYPE_CHECKING
+
+from repro.core.fusion import FusionState
+from repro.core.ga import GAConfig, GAResult, run_ga
+from repro.core.graph import LayerGraph
+
+if TYPE_CHECKING:  # lazy at runtime: costmodel imports core.fusion
+    from repro.costmodel.accelerator import Accelerator
+    from repro.costmodel.energy import EnergyModel
+    from repro.costmodel.evaluator import ScheduleCost
+
+
+@dataclass
+class ScheduleResult:
+    workload: str
+    accelerator: str
+    baseline: ScheduleCost              # layerwise
+    best: ScheduleCost                  # GA-optimized
+    best_state: FusionState
+    ga: GAResult
+
+    @property
+    def energy_improvement(self) -> float:
+        return self.baseline.energy_pj / self.best.energy_pj
+
+    @property
+    def edp_improvement(self) -> float:
+        return self.baseline.edp / self.best.edp
+
+    @property
+    def cycles_improvement(self) -> float:
+        return self.baseline.cycles / self.best.cycles
+
+    @property
+    def dram_improvement(self) -> float:
+        b = self.baseline.dram_read_words + self.baseline.dram_write_words
+        n = self.best.dram_read_words + self.best.dram_write_words
+        return b / max(n, 1)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "workload": self.workload,
+            "accelerator": self.accelerator,
+            "energy_x": round(self.energy_improvement, 3),
+            "edp_x": round(self.edp_improvement, 3),
+            "cycles_x": round(self.cycles_improvement, 3),
+            "dram_x": round(self.dram_improvement, 3),
+            "groups": self.best.n_groups,
+            "act_dram_writes_base": self.baseline.act_write_events,
+            "act_dram_writes_best": self.best.act_write_events,
+            "ga_evaluations": self.ga.evaluations,
+        }
+
+
+def optimize(graph: LayerGraph, acc: "Accelerator",
+             config: GAConfig = GAConfig(),
+             em: "EnergyModel" = None) -> ScheduleResult:
+    from repro.costmodel.energy import DEFAULT_ENERGY
+    from repro.costmodel.evaluator import Evaluator
+    ev = Evaluator(graph, acc, em or DEFAULT_ENERGY)
+    result = run_ga(graph, ev, config)
+    best_cost = ev.evaluate(result.best_state)
+    assert best_cost is not None, "GA returned an invalid best state"
+    return ScheduleResult(
+        workload=graph.name, accelerator=acc.name,
+        baseline=ev.layerwise(), best=best_cost,
+        best_state=result.best_state, ga=result)

@@ -1,0 +1,102 @@
+"""The paper's GA re-targeted at TPU training schedules (beyond-paper).
+
+Same Alg. 1 skeleton (population, combine/separate-style mutations, fitness
+= baseline/new, Top-N + random survivors), but the genome is a
+:class:`repro.costmodel.tpu_model.TpuSchedule` — remat policy (the TPU
+analogue of the paper's fuse/split decision: *which activations stay
+"on-chip"/cheap vs round-trip HBM*), microbatch count (receptive-field-style
+working-set sizing) and gradient compression (cross-pod DRAM<->DCI traffic).
+
+Fitness comes from the analytical TPU cost model; candidates whose HBM
+residency exceeds capacity are invalid — the same capacity-check-discard the
+paper applies to over-buffer fusion states.  The dry-run validates the
+winner by re-lowering (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.ga import GAConfig
+from repro.costmodel.tpu_model import TpuCost, TpuSchedule, estimate
+from repro.roofline.analysis import HW
+
+
+@dataclass
+class TpuGAResult:
+    best: TpuSchedule
+    best_cost: TpuCost
+    baseline: TpuSchedule
+    baseline_cost: TpuCost
+    history: List[float] = field(default_factory=list)
+    evaluations: int = 0
+
+    @property
+    def edp_improvement(self) -> float:
+        return self.baseline_cost.edp / self.best_cost.edp
+
+    @property
+    def step_improvement(self) -> float:
+        return self.baseline_cost.step_s / self.best_cost.step_s
+
+
+def optimize_tpu_schedule(cfg: ModelConfig, shape: ShapeConfig, *,
+                          chips: int = 256, data_par: int = 16,
+                          model_par: int = 16, hw: HW = HW(),
+                          objective: str = "edp",
+                          ga: GAConfig = GAConfig.fast(generations=30),
+                          hbm_capacity: Optional[float] = None
+                          ) -> TpuGAResult:
+    """Search remat/microbatch/compression for one (arch x shape) cell."""
+    hbm_capacity = hbm_capacity or hw.hbm_bytes
+    rng = random.Random(ga.seed)
+    cache: Dict[TpuSchedule, Optional[TpuCost]] = {}
+
+    def cost_of(s: TpuSchedule) -> Optional[TpuCost]:
+        if s not in cache:
+            if s.sharding == "fsdp" and cfg.n_experts:
+                cache[s] = None      # EP needs the model axis (unsupported)
+            else:
+                c = estimate(cfg, shape, s, chips=chips, data_par=data_par,
+                             model_par=model_par, hw=hw)
+                cache[s] = None if c.hbm_resident_bytes > hbm_capacity else c
+        return cache[s]
+
+    baseline = TpuSchedule()                      # paper-faithful start
+    base_cost = estimate(cfg, shape, baseline, chips=chips,
+                         data_par=data_par, model_par=model_par, hw=hw)
+
+    def metric(c: TpuCost) -> float:
+        return c.edp if objective == "edp" else c.step_s
+
+    def fitness(s: TpuSchedule) -> float:
+        c = cost_of(s)
+        return 0.0 if c is None else metric(base_cost) / metric(c)
+
+    pool: List[Tuple[float, TpuSchedule]] = [(fitness(baseline), baseline)]
+    history: List[float] = []
+    for _ in range(ga.generations):
+        parents = [s for _, s in pool]
+        children = []
+        for _ in range(ga.mutations_per_gen):
+            p = parents[rng.randrange(len(parents))]
+            opts = p.mutate_options()
+            children.append(opts[rng.randrange(len(opts))])
+        merged = {s: f for f, s in pool}
+        for c in children:
+            merged[c] = fitness(c)
+        ranked = sorted(merged.items(), key=lambda kv: -kv[1])
+        top = [(f, s) for s, f in ranked[:ga.top_n]]
+        rest = [(f, s) for s, f in ranked[ga.top_n:]]
+        rng.shuffle(rest)
+        pool = top + rest[:ga.random_survivors]
+        history.append(pool[0][0])
+
+    best_f, best = max(pool, key=lambda fs: fs[0])
+    best_cost = cost_of(best)
+    assert best_cost is not None
+    return TpuGAResult(best=best, best_cost=best_cost, baseline=baseline,
+                       baseline_cost=base_cost, history=history,
+                       evaluations=len(cache))

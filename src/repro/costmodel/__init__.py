@@ -1,0 +1,8 @@
+from repro.costmodel.accelerator import ARCHS, EYERISS, SIMBA, SIMBA2X2, Accelerator
+from repro.costmodel.energy import DEFAULT_ENERGY, EnergyModel
+from repro.costmodel.evaluator import Evaluator, ScheduleCost
+from repro.costmodel.mapper import LayerCost, map_layer, spatial_utilization
+
+__all__ = ["ARCHS", "EYERISS", "SIMBA", "SIMBA2X2", "Accelerator",
+           "DEFAULT_ENERGY", "EnergyModel", "Evaluator", "ScheduleCost",
+           "LayerCost", "map_layer", "spatial_utilization"]

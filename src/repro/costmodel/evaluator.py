@@ -1,0 +1,167 @@
+"""Schedule evaluation: layerwise baseline vs fused states (paper Alg. 1 l.5-9).
+
+A :class:`FusionState` is costed group-by-group.  Because a tensor's DRAM
+residency is fully determined by its producer's group membership (it goes
+off-chip iff some consumer is outside the group), each group's cost depends
+*only* on its member set — so group costs are memoized across the entire GA
+run, which is what makes the paper's P=100 x G=500 search fast.
+
+Group costing (multi-member groups):
+  1. largest output-tile height ``t`` whose line-buffer footprint fits the
+     activation buffer (``repro.core.receptive``); no feasible ``t`` =>
+     the state is invalid (paper: "Any mapping where intermediate storage
+     exceeds capacity is discarded as invalid").
+  2. if aggregate group weights exceed the weight buffer, weights re-stream
+     from DRAM once per tile pass (paper §IV).
+  3. member layers are costed with intra-group edges kept on-chip; compute
+     and DRAM time overlap within the group.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+from repro.core.fusion import FusionState
+from repro.core.graph import LayerGraph
+from repro.core.receptive import max_tile_rows
+from repro.core.toposort import topological_sort_edges
+from repro.costmodel.accelerator import Accelerator
+from repro.costmodel.energy import DEFAULT_ENERGY, EnergyModel
+from repro.costmodel.mapper import LayerCost, map_layer
+
+
+@dataclass(frozen=True)
+class ScheduleCost:
+    energy_pj: float
+    cycles: float
+    dram_read_words: int
+    dram_write_words: int
+    act_write_events: int
+    macs: int
+    n_groups: int
+
+    @property
+    def seconds(self) -> float:
+        return self.cycles / 200e6          # evaluated clock is set per-arch
+
+    @property
+    def edp(self) -> float:
+        return self.energy_pj * self.cycles
+
+    @property
+    def energy_j(self) -> float:
+        return self.energy_pj * 1e-12
+
+    def metric(self, objective: str) -> float:
+        return {"edp": self.edp, "energy": self.energy_pj,
+                "cycles": self.cycles,
+                "dram": float(self.dram_read_words + self.dram_write_words),
+                }[objective]
+
+
+class Evaluator:
+    """Memoizing schedule evaluator for one (graph, accelerator) pair."""
+
+    def __init__(self, graph: LayerGraph, acc: Accelerator,
+                 em: EnergyModel = DEFAULT_ENERGY):
+        self.graph = graph
+        self.acc = acc
+        self.em = em
+        self._group_cache: Dict[FrozenSet[str], Optional[Tuple[LayerCost, float]]] = {}
+        self.evals = 0
+        self._layerwise: Optional[ScheduleCost] = None
+
+    # ---- public API ----------------------------------------------------------------
+    def layerwise(self) -> ScheduleCost:
+        if self._layerwise is None:
+            self._layerwise = self.evaluate(FusionState.layerwise(self.graph))
+            assert self._layerwise is not None
+        return self._layerwise
+
+    def evaluate(self, state: FusionState) -> Optional[ScheduleCost]:
+        """Total cost, or None if the state is invalid (unschedulable or
+        over-capacity)."""
+        self.evals += 1
+        if not state.is_schedulable():
+            return None
+        total = LayerCost()
+        cycles = 0.0
+        groups = state.groups()
+        for g in groups:
+            cached = self._group_cost(g)
+            if cached is None:
+                return None
+            gcost, gcycles = cached
+            total += gcost
+            cycles += gcycles
+        return ScheduleCost(
+            energy_pj=total.energy_pj, cycles=cycles,
+            dram_read_words=total.dram_read_words,
+            dram_write_words=total.dram_write_words,
+            act_write_events=total.act_write_events,
+            macs=total.macs, n_groups=len(groups))
+
+    def fitness(self, state: FusionState, objective: str = "edp") -> float:
+        """Paper Alg. 1 line 9: F = Eval_layerwise / Eval_new (0 if invalid)."""
+        cost = self.evaluate(state)
+        if cost is None:
+            return 0.0
+        new = cost.metric(objective)
+        return self.layerwise().metric(objective) / new if new > 0 else 0.0
+
+    # ---- internals ------------------------------------------------------------------
+    def _group_cost(self, members: FrozenSet[str]
+                    ) -> Optional[Tuple[LayerCost, float]]:
+        if members in self._group_cache:
+            return self._group_cache[members]
+        cost = self._compute_group_cost(members)
+        self._group_cache[members] = cost
+        return cost
+
+    def _compute_group_cost(self, members: FrozenSet[str]
+                            ) -> Optional[Tuple[LayerCost, float]]:
+        g = self.graph
+        order = topological_sort_edges(
+            [n for n in g.names if n in members], g.edges)
+        multi = len([n for n in order if g.layers[n].macs]) > 1
+
+        weight_passes = 1
+        if multi and len(order) > 1:
+            t = max_tile_rows(g, order, self.acc.act_buf_words)
+            if t == 0:
+                return None                              # over-capacity: invalid
+            group_w = sum(g.layers[n].weight_size for n in order)
+            if group_w > self.acc.weight_buf_words:
+                sink_p = max((g.layers[n].p or 1) for n in order)
+                weight_passes = math.ceil(sink_p / t)
+
+        total = LayerCost()
+        compute_cycles = 0.0
+        dram_cycles = 0.0
+        for name in order:
+            layer = g.layers[name]
+            inputs_off = self._inputs_offchip(name, members)
+            outputs_off = self._outputs_offchip(name, members)
+            lc = map_layer(layer, self.acc, self.em,
+                           inputs_offchip=inputs_off,
+                           outputs_offchip=outputs_off,
+                           weight_stream_passes=weight_passes if multi else 1)
+            total += lc
+            compute_cycles += lc.compute_cycles
+            dram_cycles += lc.dram_cycles
+        # compute/DRAM overlap across the whole group pipeline
+        group_cycles = max(compute_cycles, dram_cycles)
+        return total, group_cycles
+
+    def _inputs_offchip(self, name: str, members: FrozenSet[str]) -> bool:
+        preds = self.graph.preds(name)
+        if not preds:
+            return True                                  # graph input from DRAM
+        return any(p not in members for p in preds)
+
+    def _outputs_offchip(self, name: str, members: FrozenSet[str]) -> bool:
+        succ = self.graph.succs(name)
+        if not succ:
+            return True                                  # model output
+        return any(v not in members for v in succ)

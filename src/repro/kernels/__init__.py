@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Each kernel lives in its own subpackage with the required trio:
+``kernel.py`` (pl.pallas_call + BlockSpec VMEM tiling), ``ops.py`` (jit'd
+wrapper), ``ref.py`` (pure-jnp oracle).  All kernels are TPU-target and
+validated on CPU with ``interpret=True``.
+
+The BlockSpec tile sizes are the TPU re-derivation of the paper's
+receptive-field rule: the largest tile whose fused working set fits VMEM,
+MXU-aligned (multiples of 128).
+"""
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.mamba_scan.ops import mamba_scan
+from repro.kernels.rglru_scan.ops import rglru_scan
+from repro.kernels.rmsnorm.ops import fused_rmsnorm
+
+__all__ = ["flash_attention", "mamba_scan", "rglru_scan", "fused_rmsnorm"]

@@ -1,0 +1,29 @@
+"""jit'd public wrapper around the flash-attention Pallas kernel.
+
+Takes model-layout tensors (B, S, H, D) and handles transposition, GQA and
+block-size selection.  ``interpret=True`` runs the kernel body on CPU (how
+this container validates it); on TPU leave it False.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "chunk", "q_offset",
+                                   "block_q", "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, chunk=0, q_offset=0,
+                    block_q=128, block_kv=128, interpret=False):
+    """q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_kernel(qt, kt, vt, causal=causal, window=window,
+                                 chunk=chunk, q_offset=q_offset,
+                                 block_q=block_q, block_kv=block_kv,
+                                 interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

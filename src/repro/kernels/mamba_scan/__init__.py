@@ -1,0 +1,3 @@
+from repro.kernels.mamba_scan.ops import mamba_scan
+
+__all__ = ["mamba_scan"]

@@ -1,0 +1,28 @@
+"""jit'd wrapper: pads (S, Di) to block multiples and dispatches the kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba_scan.kernel import mamba_scan_kernel
+
+
+@partial(jax.jit, static_argnames=("block_d", "time_chunk", "interpret"))
+def mamba_scan(da, dbx, c, *, block_d=128, time_chunk=128, interpret=False):
+    B, S, Di, N = da.shape
+    ps = -S % min(time_chunk, S) if S >= time_chunk else time_chunk - S
+    pd = -Di % min(block_d, Di) if Di >= block_d else block_d - Di
+    if S < time_chunk:
+        ps = time_chunk - S
+    if Di < block_d:
+        pd = block_d - Di
+    if ps or pd:
+        pad4 = ((0, 0), (0, ps), (0, pd), (0, 0))
+        da = jnp.pad(da, pad4)
+        dbx = jnp.pad(dbx, pad4)
+        c = jnp.pad(c, ((0, 0), (0, ps), (0, 0)))
+    y = mamba_scan_kernel(da, dbx, c, block_d=block_d,
+                          time_chunk=time_chunk, interpret=interpret)
+    return y[:, :S, :Di]

@@ -1,0 +1,23 @@
+"""Pure-jnp sequential oracle for the mamba scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(da, dbx, c):
+    """da, dbx: (B, S, Di, N); c: (B, S, N) -> y (B, S, Di)."""
+    B, S, Di, N = da.shape
+
+    def step(h, inp):
+        da_t, dbx_t, c_t = inp
+        h = da_t * h + dbx_t                       # (B, Di, N)
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((B, Di, N), jnp.float32)
+    xs = (da.swapaxes(0, 1).astype(jnp.float32),
+          dbx.swapaxes(0, 1).astype(jnp.float32),
+          c.swapaxes(0, 1).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(da.dtype)

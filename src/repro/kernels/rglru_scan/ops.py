@@ -1,0 +1,22 @@
+"""jit'd wrapper for the RG-LRU scan kernel (pads S and W to blocks)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.kernel import rglru_scan_kernel
+
+
+@partial(jax.jit, static_argnames=("block_w", "time_chunk", "interpret"))
+def rglru_scan(a, b, *, block_w=128, time_chunk=256, interpret=False):
+    B, S, W = a.shape
+    ps = (time_chunk - S) if S < time_chunk else (-S % time_chunk)
+    pw = (block_w - W) if W < block_w else (-W % block_w)
+    if ps or pw:
+        a = jnp.pad(a, ((0, 0), (0, ps), (0, pw)))
+        b = jnp.pad(b, ((0, 0), (0, ps), (0, pw)))
+    h = rglru_scan_kernel(a, b, block_w=block_w, time_chunk=time_chunk,
+                          interpret=interpret)
+    return h[:, :S, :W]

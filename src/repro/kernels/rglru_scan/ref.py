@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b):
+    """a, b: (B, S, W) -> h (B, S, W)."""
+    def step(h, inp):
+        a_t, b_t = inp
+        h = a_t * h + b_t
+        return h, h
+
+    h0 = jnp.zeros((a.shape[0], a.shape[2]), jnp.float32)
+    xs = (a.swapaxes(0, 1).astype(jnp.float32),
+          b.swapaxes(0, 1).astype(jnp.float32))
+    _, hs = jax.lax.scan(step, h0, xs)
+    return hs.swapaxes(0, 1).astype(a.dtype)

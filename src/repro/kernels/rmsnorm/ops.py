@@ -1,0 +1,23 @@
+"""jit'd wrapper for the fused RMSNorm kernel (flattens leading dims)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_kernel
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def fused_rmsnorm(x, w, residual=None, *, eps=1e-6, block_rows=256,
+                  interpret=False):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    r2 = None if residual is None else residual.reshape(-1, shape[-1])
+    out = rmsnorm_kernel(x2, w, r2, eps=eps, block_rows=block_rows,
+                         interpret=interpret)
+    if residual is None:
+        return out.reshape(shape)
+    y, res = out
+    return y.reshape(shape), res.reshape(shape)

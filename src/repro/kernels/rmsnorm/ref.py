@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, w, residual=None, *, eps=1e-6):
+    if residual is not None:
+        x = x.astype(jnp.float32) + residual.astype(jnp.float32)
+        res = x
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
+    y = (y * w.astype(jnp.float32))
+    if residual is not None:
+        return y, res
+    return y

@@ -1,0 +1,311 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh (16x16 single pod or 2x16x16
+multi-pod), the model's parameter/optimizer/batch ShapeDtypeStructs (no
+allocation), pjit-lowers the right step (train_step for train shapes,
+prefill/decode for serving shapes), compiles, and records:
+
+* ``memory_analysis()``  — per-device bytes (proves the cell fits),
+* ``cost_analysis()``    — FLOPs / bytes for the §Roofline terms,
+* HLO-parsed collective bytes (all-gather/all-reduce/reduce-scatter/
+  all-to-all/collective-permute),
+
+into ``artifacts/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all [--mesh both] [--jobs-file path]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (SHAPES, cell_skip_reason, get_config, get_reduced,
+                           iter_cells)
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models import transformer as T
+from repro.models.common import pspec, use_mesh
+from repro.roofline.analysis import collective_bytes
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+def _sharding_tree(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _mem_analysis(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_size_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_size_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "generated_code_size_bytes":
+                getattr(ma, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:                              # backend-dependent
+        return {"error": repr(e)}
+
+
+_COST_KEYS = ("flops", "bytes accessed", "transcendentals")
+
+
+def _lower_compile(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                   attn_impl: str, microbatches: int = 1,
+                   grad_compression: bool = False):
+    """Lower + compile the right step for this cell under ``mesh``.
+    Returns (compiled, lower_s, compile_s)."""
+    t0 = time.time()
+    with use_mesh(mesh):
+        param_shapes = jax.eval_shape(partial(T.init_params, cfg),
+                                      jax.random.PRNGKey(0))
+        fit = partial(steps_lib.fit_sharding_tree, mesh)
+        p_shard = _sharding_tree(mesh, fit(T.param_pspecs(cfg), param_shapes))
+
+        if shape.kind == "train":
+            train_step, opt_init = steps_lib.make_train_step(
+                cfg, attn_impl=attn_impl, microbatches=microbatches,
+                grad_compression=grad_compression)
+            opt_shapes = jax.eval_shape(opt_init, param_shapes)
+            o_spec_tree = {"adam": steps_lib.opt_state_pspecs(cfg)}
+            o_shape_tree = {"adam": {"mu": param_shapes, "nu": param_shapes,
+                                     "step": opt_shapes["adam"]["step"]}}
+            if grad_compression:
+                o_spec_tree["ef"] = T.param_pspecs(cfg)
+                o_shape_tree["ef"] = param_shapes
+            o_specs = fit(o_spec_tree, o_shape_tree)
+            o_shard = _sharding_tree(mesh, o_specs)
+            batch_shapes = T.input_specs(cfg, shape)
+            b_shard = _sharding_tree(
+                mesh, fit(steps_lib.train_batch_pspecs(cfg), batch_shapes))
+            fn = jax.jit(train_step,
+                         in_shardings=(p_shard, o_shard, b_shard),
+                         out_shardings=(p_shard, o_shard, None),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(param_shapes, opt_shapes, batch_shapes)
+        elif shape.kind == "prefill":
+            prefill_step = steps_lib.make_prefill_step(cfg, shape,
+                                                       attn_impl=attn_impl)
+            batch_shapes = T.input_specs(cfg, shape)
+            b_specs = {k: pspec(("pod", "data"),
+                                *([None] * (len(v.shape) - 1)))
+                       for k, v in batch_shapes.items()}
+            b_shard = _sharding_tree(mesh, fit(b_specs, batch_shapes))
+            fn = jax.jit(prefill_step, in_shardings=(p_shard, b_shard))
+            lowered = fn.lower(param_shapes, batch_shapes)
+        else:  # decode
+            decode_step = steps_lib.make_decode_step(cfg, attn_impl=attn_impl)
+            batch_shapes = T.input_specs(cfg, shape)
+            b_shard = _sharding_tree(
+                mesh, fit(steps_lib.decode_input_pspecs(cfg, shape),
+                          batch_shapes))
+            cache_shapes = batch_shapes["caches"]
+            cache_out = _sharding_tree(
+                mesh, fit(T.cache_pspecs(cfg,
+                                         shard_seq=shape.global_batch == 1),
+                          cache_shapes))
+            fn = jax.jit(decode_step, in_shardings=(p_shard, b_shard),
+                         out_shardings=(None, cache_out),
+                         donate_argnums=(1,))
+            lowered = fn.lower(param_shapes, batch_shapes)
+        lower_s = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        return compiled, lower_s, time.time() - t1
+
+
+def _extract(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    out = {"cost": {k: float(cost.get(k, 0.0)) for k in _COST_KEYS}}
+    hlo = compiled.as_text()
+    out["collectives"] = collective_bytes(hlo)
+    out["hlo_bytes"] = len(hlo)
+    return out
+
+
+def _depth_points(cfg: ModelConfig):
+    """Two shallow configs (unrolled) whose cost delta is one repeat unit of
+    the layer stack — see EXPERIMENTS.md §Dry-run methodology."""
+    plen = (len(cfg.block_pattern) or
+            (cfg.global_every if cfg.attn_chunk and cfg.global_every else 1))
+    reps_full = cfg.n_layers // plen
+    rem = cfg.n_layers % plen
+    if reps_full < 2:
+        return None
+    mk = lambda r: dataclasses.replace(
+        cfg, n_layers=plen * r + rem, scan_layers=False, exact_costs=True,
+        n_enc_layers=(r if cfg.is_encdec else cfg.n_enc_layers))
+    return mk(1), mk(2), reps_full
+
+
+def _combine_costs(a: dict, b: dict, reps_full: int) -> dict:
+    """total = a + (b - a) * (reps_full - 1), per cost key and collective.
+    Clamped at the single-repeat value: the partitioner occasionally picks a
+    cheaper collective pattern at depth 2, which would extrapolate negative.
+    """
+    out = {"cost": {}, "collectives": {}}
+    for k in _COST_KEYS:
+        ca, cb = a["cost"].get(k, 0.0), b["cost"].get(k, 0.0)
+        out["cost"][k] = max(ca + (cb - ca) * (reps_full - 1), ca)
+    keys = set(a["collectives"]) | set(b["collectives"])
+    for k in keys:
+        ca, cb = a["collectives"].get(k, 0), b["collectives"].get(k, 0)
+        out["collectives"][k] = int(max(ca + (cb - ca) * (reps_full - 1),
+                                        ca))
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             attn_impl: str = "auto", remat: str = "none",
+             cost_mode: str = "extrapolate", microbatches: int = 1,
+             reduced: bool = False, grad_compression: bool = False,
+             sharding: str = "tp") -> dict:
+    from repro.models.common import set_sharding_mode
+    set_sharding_mode(sharding)
+    cfg = get_reduced(arch) if reduced else get_config(arch)
+    if remat != "none":
+        cfg = dataclasses.replace(cfg, remat=remat)
+    shape = SHAPES[shape_name]
+    if reduced:   # integration-test scale: tiny shape, 8-device local mesh
+        shape = dataclasses.replace(shape, seq_len=64, global_batch=4)
+    if mesh_kind == "local":
+        mesh = make_local_mesh(2, 4)
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    art = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "chips": int(mesh.devices.size), "attn_impl": attn_impl,
+           "remat": remat, "microbatches": microbatches,
+           "grad_compression": grad_compression, "sharding": sharding,
+           "status": "ok"}
+
+    # 1) the real config: proves (lower + compile + shard) at full depth
+    compiled, lower_s, compile_s = _lower_compile(cfg, shape, mesh, attn_impl,
+                                                  microbatches,
+                                                  grad_compression)
+    art["lower_s"] = round(lower_s, 2)
+    art["compile_s"] = round(compile_s, 2)
+    art["memory"] = _mem_analysis(compiled)
+    scanned = _extract(compiled)
+    art["cost_scanned"] = scanned["cost"]          # scan bodies counted once
+    art["collectives_scanned"] = scanned["collectives"]
+    art["hlo_bytes"] = scanned["hlo_bytes"]
+
+    # 2) exact per-layer costs: two shallow unrolled points (inner scans
+    # unrolled, microbatch scan removed — cost_analysis counts scan bodies
+    # once, so the real config's numbers would undercount), extrapolated
+    if cost_mode == "extrapolate" and (pts := _depth_points(cfg)):
+        cfg_a, cfg_b, reps_full = pts
+        ca = _extract(_lower_compile(cfg_a, shape, mesh, attn_impl, 1,
+                                     grad_compression)[0])
+        cb = _extract(_lower_compile(cfg_b, shape, mesh, attn_impl, 1,
+                                     grad_compression)[0])
+        ext = _combine_costs(ca, cb, reps_full)
+        art["cost"] = ext["cost"]
+        art["collectives"] = ext["collectives"]
+        art["cost_points"] = {"a": ca["cost"], "b": cb["cost"],
+                              "reps_full": reps_full,
+                              "layers_a": cfg_a.n_layers,
+                              "layers_b": cfg_b.n_layers}
+    else:
+        art["cost"] = scanned["cost"]
+        art["collectives"] = scanned["collectives"]
+
+    art["n_params"] = int(cfg.n_params)
+    art["n_active_params"] = int(cfg.n_active_params)
+    art["tokens"] = int(shape.global_batch *
+                        (shape.seq_len if shape.kind != "decode" else 1))
+    return art
+
+
+def save_artifact(art: dict, out_dir: str, extra_tag: str = ""):
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"__{extra_tag}" if extra_tag else ""
+    path = os.path.join(
+        out_dir, f"{art['arch']}__{art['shape']}__{art['mesh']}{tag}.json")
+    with open(path, "w") as f:
+        json.dump(art, f, indent=1)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both", "local"])
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config + tiny shape (integration tests)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--attn-impl", default="auto")
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--cost-mode", default="extrapolate",
+                    choices=["extrapolate", "scanned"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--sharding", default="tp", choices=["tp", "fsdp"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=os.path.abspath(ARTIFACT_DIR))
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for arch, sname, shape, skip in iter_cells():
+            for m in meshes:
+                cells.append((arch, sname, m, skip))
+    else:
+        skip = cell_skip_reason(args.arch, args.shape)
+        for m in meshes:
+            cells.append((args.arch, args.shape, m, skip))
+
+    failures = 0
+    for arch, sname, m, skip in cells:
+        label = f"{arch} x {sname} x {m}"
+        if skip:
+            art = {"arch": arch, "shape": sname, "mesh": m,
+                   "status": "skipped", "reason": skip,
+                   "chips": 512 if m == "multi" else 256}
+            save_artifact(art, args.out, args.tag)
+            print(f"[SKIP] {label}: {skip}", flush=True)
+            continue
+        try:
+            art = run_cell(arch, sname, m, attn_impl=args.attn_impl,
+                           remat=args.remat, cost_mode=args.cost_mode,
+                           microbatches=args.microbatches,
+                           reduced=args.reduced,
+                           grad_compression=args.grad_compression,
+                           sharding=args.sharding)
+            path = save_artifact(art, args.out, args.tag)
+            coll = art["collectives"]
+            print(f"[OK]   {label}: compile={art['compile_s']}s "
+                  f"flops={art['cost'].get('flops', 0):.3e} "
+                  f"coll={sum(v for k, v in coll.items() if k != 'count'):.3e}B "
+                  f"-> {os.path.basename(path)}", flush=True)
+        except Exception as e:
+            failures += 1
+            art = {"arch": arch, "shape": sname, "mesh": m,
+                   "status": "failed", "error": traceback.format_exc()}
+            save_artifact(art, args.out, args.tag)
+            print(f"[FAIL] {label}: {e!r}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

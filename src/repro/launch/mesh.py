@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Single pod: 256 chips as (data=16, model=16).  Multi-pod: 2 pods = 512 chips
+as (pod=2, data=16, model=16) — the ``pod`` axis composes with ``data`` for
+data parallelism (its all-reduce crosses the data-center interconnect, which
+is why gradient compression targets it), while ``model`` stays inside a pod
+(ICI-speed TP/EP).
+
+Defined as functions, not module constants, so importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many (CPU) devices exist — tests/examples."""
+    return _mk((data, model), ("data", "model"))

@@ -1,0 +1,158 @@
+"""pjit-able train / prefill / decode step builders + their shardings.
+
+``make_train_step`` builds the full step: microbatched value_and_grad (grad
+accumulation via lax.scan — overlapping per-microbatch compute with the
+deferred data-parallel reduce), optional error-feedback int8 gradient
+compression for the cross-pod all-reduce, AdamW, donated state.
+
+Sharding contracts (resolved against the active mesh via ``use_mesh``):
+  params/opt-state : per-tensor specs from the model (TP over ``model``,
+                     FSDP over ``pod``+``data``)
+  train batch      : batch dim over (pod, data)
+  decode caches    : batch over (pod, data) — or sequence over data when
+                     global_batch == 1 (long_500k sequence-parallel decode)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.models.common import BATCH, pspec
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         compress_decompress_ef)
+
+
+# ---- sharding specs -----------------------------------------------------------------
+
+def fit_spec(spec: P, shape, mesh) -> P:
+    """Drop spec axes that do not divide the corresponding dimension.
+
+    pjit in_shardings require exact divisibility (unlike in-graph
+    constraints); this resolves e.g. whisper's odd 51865-vocab embedding or
+    a global_batch=1 decode cell to replication on the offending dim."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    entries = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    fixed = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            fixed.append(None)
+            continue
+        names = (entry,) if isinstance(entry, str) else tuple(entry)
+        total = 1
+        for n in names:
+            total *= sizes.get(n, 1)
+        fixed.append(entry if total and dim % total == 0 else None)
+    return P(*fixed)
+
+
+def fit_sharding_tree(mesh, spec_tree, shape_tree):
+    """Apply :func:`fit_spec` leaf-wise (spec tree mirrors shape tree)."""
+    return jax.tree.map(
+        lambda s, x: fit_spec(s, x.shape, mesh), spec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def train_batch_pspecs(cfg: ModelConfig) -> Dict:
+    from repro.models.common import SEQ
+    specs = {"tokens": pspec(BATCH, SEQ), "labels": pspec(BATCH, SEQ)}
+    if cfg.img_tokens:
+        specs["img_embeds"] = pspec(BATCH, None, None)
+    if cfg.is_encdec:
+        specs["frames"] = pspec(BATCH, None, None)
+    return specs
+
+
+def opt_state_pspecs(cfg: ModelConfig) -> Dict:
+    pp = T.param_pspecs(cfg)
+    return {"mu": pp, "nu": pp, "step": pspec()}
+
+
+def decode_input_pspecs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    shard_seq = shape.global_batch == 1
+    specs = {"token": pspec(BATCH, None), "pos": pspec(),
+             "caches": T.cache_pspecs(cfg, shard_seq=shard_seq)}
+    if cfg.is_encdec:
+        specs["enc_out"] = pspec(BATCH, None, None)
+    return specs
+
+
+# ---- step builders ---------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[AdamWConfig] = None,
+                    *, microbatches: int = 1, grad_compression: bool = False,
+                    attn_impl: str = "auto"):
+    """Returns (train_step, opt_init).  train_step(params, opt_state, batch)
+    -> (params, opt_state, metrics)."""
+    opt_cfg = opt_cfg or AdamWConfig(moment_dtype=cfg.moment_dtype)
+
+    def loss_of(p, batch):
+        return T.loss_fn(p, cfg, batch, impl=attn_impl)[0]
+
+    def grads_of(p, batch):
+        if microbatches <= 1:
+            return jax.value_and_grad(loss_of)(p, batch)
+        mb = jax.tree.map(
+            lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                + x.shape[1:]), batch)
+
+        acc_dt = jnp.dtype(cfg.grad_accum_dtype)
+
+        def body(acc, one):
+            l, g = jax.value_and_grad(loss_of)(p, one)
+            return jax.tree.map(lambda a, b: a + b.astype(a.dtype), acc,
+                                (l, g)), None
+
+        zero = (jnp.zeros(()),
+                jax.tree.map(lambda x: jnp.zeros(x.shape, acc_dt), p))
+        (lsum, gsum), _ = jax.lax.scan(body, zero, mb)
+        scale = 1.0 / microbatches
+        return lsum * scale, jax.tree.map(lambda g: g * scale, gsum)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        if grad_compression:
+            grads, new_ef = compress_decompress_ef(grads, opt_state["ef"])
+        new_p, new_opt, metrics = adamw_update(
+            params, grads, opt_state["adam"], opt_cfg)
+        out_state = {"adam": new_opt}
+        if grad_compression:
+            out_state["ef"] = new_ef
+        metrics = dict(metrics, loss=loss)
+        return new_p, out_state, metrics
+
+    def opt_init(params):
+        st = {"adam": adamw_init(params, opt_cfg)}
+        if grad_compression:
+            from repro.optim import ef_state_init
+            st["ef"] = ef_state_init(params)
+        return st
+
+    return train_step, opt_init
+
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
+                      attn_impl: str = "auto"):
+    def prefill_step(params, batch):
+        logits, caches, _ = T.prefill(params, cfg, batch,
+                                      max_len=shape.seq_len, impl=attn_impl)
+        return logits, caches
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, attn_impl: str = "auto"):
+    def decode_step(params, batch):
+        enc_kv = None
+        if cfg.is_encdec:
+            enc_kv = (batch["enc_out"], jnp.arange(batch["enc_out"].shape[1]))
+        logits, caches = T.decode_step(params, cfg, batch["token"],
+                                       batch["pos"], batch["caches"],
+                                       enc_kv=enc_kv, impl=attn_impl)
+        return logits, caches
+    return decode_step

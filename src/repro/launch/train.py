@@ -1,0 +1,164 @@
+"""Training driver: pjit train loop + data pipeline + async checkpointing +
+watchdog + bounded restarts.  Usable as a library (tests/examples) and as a
+CLI:
+
+    python -m repro.launch.train --arch stablelm-1.6b --reduced \
+        --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/run1
+
+The loop is deterministic-resumable: batch t is a pure function of (seed, t),
+so restarting from step k replays nothing (see repro/data/pipeline.py).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, get_reduced
+from repro.configs.base import ModelConfig
+from repro.data import DataConfig, SyntheticTokenPipeline
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_local_mesh
+from repro.models import transformer as T
+from repro.models.common import use_mesh
+from repro.optim import AdamWConfig
+from repro.runtime import FaultConfig, FaultInjector, Watchdog, run_with_restarts
+
+
+@dataclasses.dataclass
+class TrainRunConfig:
+    cfg: ModelConfig
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 128
+    seed: int = 0
+    lr: float = 1e-3
+    microbatches: int = 1
+    grad_compression: bool = False
+    ckpt_dir: Optional[str] = None
+    save_every: int = 50
+    log_every: int = 10
+    attn_impl: str = "auto"
+
+
+def train_loop(run: TrainRunConfig, mesh=None, injector=None,
+               fault: FaultConfig = FaultConfig(max_restarts=3,
+                                                step_deadline_s=300.0),
+               log=print) -> Dict[str, Any]:
+    """Run the supervised training loop; returns final state + history."""
+    cfg = run.cfg
+    mesh = mesh or make_local_mesh(1, 1)
+    data = SyntheticTokenPipeline(DataConfig(
+        vocab=cfg.vocab, seq_len=run.seq_len, global_batch=run.global_batch,
+        seed=run.seed + 1))
+    mgr = CheckpointManager(run.ckpt_dir) if run.ckpt_dir else None
+    history: Dict[str, list] = {"loss": [], "step": []}
+
+    with use_mesh(mesh):
+        p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                               T.param_pspecs(cfg),
+                               is_leaf=lambda x: isinstance(
+                                   x, jax.sharding.PartitionSpec))
+        train_step, opt_init = steps_lib.make_train_step(
+            cfg, AdamWConfig(lr=run.lr, moment_dtype=cfg.moment_dtype),
+            microbatches=run.microbatches,
+            grad_compression=run.grad_compression,
+            attn_impl=run.attn_impl)
+        jit_step = jax.jit(train_step, donate_argnums=(0, 1))
+
+        def init_state():
+            params = jax.jit(
+                partial(T.init_params, cfg), out_shardings=p_shard
+            )(jax.random.PRNGKey(run.seed))
+            return {"params": params, "opt": opt_init(params)}
+
+        def extra_inputs(batch_np):
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            if cfg.img_tokens:
+                B = batch["tokens"].shape[0]
+                key = jax.random.PRNGKey(0)
+                batch["img_embeds"] = jax.random.normal(
+                    key, (B, cfg.img_tokens, cfg.d_model), jnp.float32
+                ).astype(jnp.bfloat16)
+            if cfg.is_encdec:
+                B = batch["tokens"].shape[0]
+                batch["frames"] = jax.random.normal(
+                    jax.random.PRNGKey(1), (B, cfg.enc_seq, cfg.d_model)
+                ).astype(jnp.bfloat16)
+            return batch
+
+        def step_fn(state, step):
+            batch = extra_inputs(data.global_batch_at(step))
+            params, opt, metrics = jit_step(state["params"], state["opt"],
+                                            batch)
+            if step % run.log_every == 0 or step == run.steps - 1:
+                loss = float(metrics["loss"])
+                history["loss"].append(loss)
+                history["step"].append(step)
+                log(f"step {step:5d}  loss {loss:.4f}  "
+                    f"gnorm {float(metrics['grad_norm']):.3f}")
+            return {"params": params, "opt": opt}
+
+        def save_fn(state, step):
+            if mgr is not None:
+                mgr.save_async(step, state)
+
+        def restore_fn():
+            if mgr is None or mgr.latest_step() is None:
+                return None
+            mgr.wait()
+            like = jax.eval_shape(init_state)
+            state, step = mgr.restore(
+                jax.tree.map(lambda s: np.zeros(s.shape, s.dtype), like))
+            state = jax.device_put(state)
+            return state, step
+
+        out = run_with_restarts(
+            total_steps=run.steps, init_state=init_state, step_fn=step_fn,
+            save_fn=save_fn, restore_fn=restore_fn,
+            save_every=run.save_every, fault=fault, injector=injector)
+        if mgr is not None:
+            mgr.wait()
+        out["history"] = history
+        return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-test-sized config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--ckpt-dir")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    run = TrainRunConfig(cfg=cfg, steps=args.steps, global_batch=args.batch,
+                         seq_len=args.seq, lr=args.lr, seed=args.seed,
+                         microbatches=args.microbatches,
+                         grad_compression=args.grad_compression,
+                         ckpt_dir=args.ckpt_dir)
+    t0 = time.time()
+    out = train_loop(run)
+    print(f"done: {out['completed_steps']} steps, {out['restarts']} restarts, "
+          f"{time.time() - t0:.1f}s; final loss "
+          f"{out['history']['loss'][-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

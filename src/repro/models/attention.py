@@ -1,0 +1,170 @@
+"""Attention: dense, blockwise (flash-style lax.scan), local/chunked, decode.
+
+Shapes: q (B, Sq, Hq, D), k/v (B, Skv, Hkv, D) with Hq = Hkv * G (GQA).
+Grouped heads are never materialized: scores are computed per (Hkv, G).
+
+Three execution paths:
+* ``dense``      — full-score einsum; short sequences and the test oracle.
+* ``blockwise``  — online-softmax lax.scan over KV blocks (the XLA analogue
+  of the Pallas flash kernel in ``repro/kernels``); memory O(block) instead
+  of O(S^2).  This is the paper's receptive-field-tiling idea applied to the
+  TPU memory hierarchy: KV tiles stream through fast memory while the
+  softmax state (m, l, o) stays resident.
+* ``local``      — banded/chunked attention computed exactly (two-block
+  reshape), so sliding-window (recurrentgemma) and chunked (llama4) layers
+  cost O(S*W) FLOPs rather than masked O(S^2).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def _softcap(x, cap: float):
+    return cap * jnp.tanh(x / cap) if cap > 0 else x
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window: int, chunk: int):
+    """(..., Sq, Skv) boolean allowed-mask from position vectors."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        ok &= kp <= qp
+    if window:
+        ok &= kp > qp - window
+    if chunk:
+        ok &= (kp // chunk) == (qp // chunk)
+    ok &= kp >= 0                      # invalid/unwritten cache slots carry pos -1
+    return ok
+
+
+def dense_attention(q, k, v, q_pos, k_pos, *, causal=True, window=0, chunk=0,
+                    softcap=0.0):
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    scale = 1.0 / math.sqrt(D)
+    scores = jnp.einsum("bshgd,bthd->bhgst", qg, k).astype(jnp.float32) * scale
+    scores = _softcap(scores, softcap)
+    mask = _mask(q_pos, k_pos, causal=causal, window=window, chunk=chunk)
+    scores = jnp.where(mask[:, None, None] if mask.ndim == 3
+                       else mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v)
+    return out.reshape(B, Sq, Hq, D)
+
+
+def blockwise_attention(q, k, v, q_pos, k_pos, *, causal=True, window=0,
+                        chunk=0, softcap=0.0, block_kv=1024, unroll=False):
+    """Online-softmax scan over KV blocks (numerics match dense to ~1e-6)."""
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    nb = -(-Skv // block_kv)
+    pad = nb * block_kv - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, pad),), constant_values=-1)
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    scale = 1.0 / math.sqrt(D)
+
+    kb = k.reshape(B, nb, block_kv, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, block_kv, Hkv, D).transpose(1, 0, 2, 3, 4)
+    pb = k_pos.reshape(nb, block_kv)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kblk, vblk, pblk = inputs
+        s = jnp.einsum("bshgd,bthd->bhgst", qg, kblk).astype(jnp.float32) * scale
+        s = _softcap(s, softcap)
+        ok = _mask(q_pos, pblk, causal=causal, window=window, chunk=chunk)
+        s = jnp.where(ok[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhgst,bthd->bhgsd", p.astype(q.dtype), vblk)
+        acc_new = acc * corr[..., None].astype(q.dtype) + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, D), q.dtype)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, pb),
+                                  unroll=nb if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(q.dtype)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, D)
+
+
+def local_attention(q, k, v, q_pos, k_pos, *, window=0, chunk=0, softcap=0.0,
+                    causal=True):
+    """Exact banded (sliding-window) or block-diagonal (chunked) attention in
+    O(S*W): sequence reshaped into W-sized chunks, each attending to itself
+    (+ its predecessor for the sliding-window case)."""
+    W = window or chunk
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    assert k.shape[1] == S, "local_attention expects self-attention shapes"
+    nb = -(-S // W)
+    pad = nb * W - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, pad),), constant_values=-(2 ** 30))
+        k_pos = jnp.pad(k_pos, ((0, pad),), constant_values=-1)
+    G = Hq // Hkv
+    qc = q.reshape(B, nb, W, Hkv, G, D)
+    kc = k.reshape(B, nb, W, Hkv, D)
+    vc = v.reshape(B, nb, W, Hkv, D)
+    qp = q_pos.reshape(nb, W)
+    kp = k_pos.reshape(nb, W)
+    if window:
+        # each chunk sees [previous chunk, itself]
+        kc = jnp.concatenate([jnp.roll(kc, 1, axis=1), kc], axis=2)
+        vc = jnp.concatenate([jnp.roll(vc, 1, axis=1), vc], axis=2)
+        kp2 = jnp.concatenate([jnp.roll(kp, 1, axis=0), kp], axis=1)
+        kp2 = kp2.at[0, :W].set(-1)            # chunk 0 has no predecessor
+        kp = kp2
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bcshgd,bcthd->bchgst", qc, kc).astype(jnp.float32) * scale
+    s = _softcap(s, softcap)
+    ok = _mask(qp, kp, causal=causal, window=window, chunk=chunk)
+    s = jnp.where(ok[None, :, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bchgst,bcthd->bcshgd", p, vc)
+    out = out.reshape(B, nb * W, Hq, D)
+    return out[:, :S]
+
+
+def attention(q, k, v, q_pos, k_pos, *, causal=True, window=0, chunk=0,
+              softcap=0.0, impl="auto", block_kv=1024, unroll=False):
+    """Dispatch to the right path.  ``impl``: auto|dense|blockwise|local.
+    ``unroll``: unroll the blockwise KV scan (exact-cost lowering mode)."""
+    Sq, Skv = q.shape[1], k.shape[1]
+    if impl == "auto":
+        if (window or chunk) and Sq == Skv and Sq > (window or chunk):
+            impl = "local"
+        elif Sq * Skv > 4096 * 4096:
+            impl = "blockwise"
+        else:
+            impl = "dense"
+    if impl == "local":
+        return local_attention(q, k, v, q_pos, k_pos, window=window,
+                               chunk=chunk, softcap=softcap, causal=causal)
+    if impl == "blockwise":
+        return blockwise_attention(q, k, v, q_pos, k_pos, causal=causal,
+                                   window=window, chunk=chunk,
+                                   softcap=softcap, block_kv=block_kv,
+                                   unroll=unroll)
+    return dense_attention(q, k, v, q_pos, k_pos, causal=causal,
+                           window=window, chunk=chunk, softcap=softcap)

@@ -1,0 +1,218 @@
+"""Shared model building blocks: norms, RoPE, initializers, sharding helpers.
+
+Everything is functional: params are nested dicts of jnp arrays; every block
+is ``f(params, x, ...) -> y``.  Sharding is expressed with *logical* axis
+names resolved against the active mesh — specs mention only axes the mesh
+actually has, so the same model code runs on 1 CPU device, a 16x16 pod, or
+the 2x16x16 multi-pod mesh.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ---- mesh-aware sharding helpers ------------------------------------------------------
+
+import contextlib
+import threading
+
+_MESH_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Enter ``mesh`` both as the JAX mesh context and for our logical-axis
+    resolution.  All launchers/tests use this instead of a bare ``with mesh``.
+    """
+    prev = getattr(_MESH_TLS, "mesh", None)
+    _MESH_TLS.mesh = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _MESH_TLS.mesh = prev
+
+
+def current_mesh():
+    return getattr(_MESH_TLS, "mesh", None)
+
+
+def mesh_axis_names() -> Tuple[str, ...]:
+    """Axis names of the mesh entered via :func:`use_mesh` (with fallbacks for
+    a bare ``with mesh:`` context or explicit abstract meshes)."""
+    mesh = current_mesh()
+    if mesh is not None:
+        return tuple(mesh.axis_names)
+    env = jax.sharding.get_abstract_mesh()
+    if env is not None and env.axis_names:
+        return tuple(env.axis_names)
+    try:  # bare `with mesh:` (physical mesh context)
+        phys = jax._src.mesh.thread_resources.env.physical_mesh
+        if phys is not None and not phys.empty:
+            return tuple(phys.axis_names)
+    except Exception:
+        pass
+    return ()
+
+
+def _resolve(entry, axes):
+    if entry is None:
+        return None
+    if entry == SEQ:
+        entry = "model" if sharding_mode() == "fsdp" else None
+        return entry if entry in axes else None
+    if entry == HEADS:
+        entry = "model" if sharding_mode() == "tp" else None
+        return entry if entry in axes else None
+    if isinstance(entry, str):
+        return entry if entry in axes else None
+    # tuple of axis names: keep the ones present
+    kept = tuple(a for a in entry if a in axes)
+    return kept if kept else None
+
+
+def pspec(*entries) -> P:
+    """PartitionSpec mentioning only axes present in the active mesh.
+
+    ``pspec(("pod", "data"), None, "model")`` -> P(("pod","data"), None,
+    "model") on the multi-pod mesh, P("data", None, "model") on a single pod,
+    P(None, None, None) on 1 CPU device.
+    """
+    axes = mesh_axis_names()
+    return P(*[_resolve(e, axes) for e in entries])
+
+
+BATCH = ("pod", "data")     # logical batch axes (composed where present)
+
+# logical placeholders resolved per sharding mode:
+#   tp   (default): HEADS -> "model" (Megatron TP), SEQ -> unsharded
+#   fsdp          : HEADS -> unsharded, SEQ -> "model" (sequence-parallel
+#                   activations; params ZeRO-3-sharded over all axes)
+SEQ = "__seq__"
+HEADS = "__heads__"
+
+_MODE_TLS = threading.local()
+
+
+def set_sharding_mode(mode: str):
+    assert mode in ("tp", "fsdp")
+    _MODE_TLS.mode = mode
+
+
+def sharding_mode() -> str:
+    return getattr(_MODE_TLS, "mode", "tp")
+
+
+def _axis_size(name: str) -> int:
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def shard(x, *entries):
+    """with_sharding_constraint with mesh-filtered axes (no-op off-mesh).
+
+    Axes that do not divide the corresponding dimension are dropped (e.g.
+    batch=1 decode cells cannot shard batch over data — the spec silently
+    falls back to replication on that dim)."""
+    if not mesh_axis_names():
+        return x
+    spec = pspec(*entries)
+    fixed = []
+    for dim, entry in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        if entry is None:
+            fixed.append(None)
+            continue
+        names = (entry,) if isinstance(entry, str) else tuple(entry)
+        total = 1
+        for n in names:
+            total *= _axis_size(n)
+        fixed.append(entry if total and dim % total == 0 else None)
+    return jax.lax.with_sharding_constraint(x, P(*fixed))
+
+
+# ---- numerics ---------------------------------------------------------------------------
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def rmsnorm(w, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def norm_apply(kind: str, params, x):
+    if kind == "rmsnorm":
+        return rmsnorm(params["scale"], x)
+    return layernorm(params, x)
+
+
+def norm_init(kind: str, d: int, dtype) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+# ---- initializers ----------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---- rotary position embeddings -------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, fraction: float, theta: float):
+    """Frequencies for (possibly partial) rotary embedding."""
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x, positions, *, fraction: float = 1.0,
+               theta: float = 10_000.0):
+    """x: (..., S, H, head_dim); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    inv, rot = rope_freqs(head_dim, fraction, theta)
+    if rot == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv    # (..., S, rot/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., :, None, :]                                 # (..., S, 1, rot/2)
+    cos = cos[..., :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ---- activations ------------------------------------------------------------------------------------
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": partial(jax.nn.gelu, approximate=True),
+            "relu": jax.nn.relu}[name]

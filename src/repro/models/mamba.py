@@ -1,0 +1,123 @@
+"""Mamba-1 selective-SSM block (falcon-mamba-7b).
+
+Follows Gu & Dao [arXiv:2312.00752]: in-projection to (x, z), causal
+depthwise conv, input-dependent (dt, B, C), ZOH discretization
+``dA = exp(dt*A)``, diagonal state scan, gated output.
+
+Train path: chunked linear scan (``scan_ops``) — or the Pallas kernel via
+``repro.kernels.mamba_scan`` on TPU.  Decode path: O(1) state update with a
+rolling conv window.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import SEQ, HEADS, dense_init, pspec, shard
+from repro.models.scan_ops import linear_scan_chunked
+
+
+def mamba_init(key, cfg, dtype) -> Dict:
+    d, di, n, r, k = (cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank,
+                      cfg.ssm_conv)
+    keys = jax.random.split(key, 6)
+    dt = jnp.exp(jax.random.uniform(keys[4], (di,)) *
+                 (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))          # softplus^-1(dt)
+    return {
+        "in_proj": dense_init(keys[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(keys[1], (k, di)) / math.sqrt(k)
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(keys[2], di, r + 2 * n, dtype),
+        "dt_proj": dense_init(keys[3], r, di, dtype, scale=r ** -0.5),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (di, 1))),         # (di, n)
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(keys[5], di, d, dtype),
+    }
+
+
+def mamba_param_specs(cfg) -> Dict:
+    fsdp = ("pod", "data")
+    return {
+        "in_proj": pspec(fsdp, "model"),
+        "conv_w": pspec(None, "model"),
+        "conv_b": pspec("model"),
+        "x_proj": pspec("model", None),
+        "dt_proj": pspec(None, "model"),
+        "dt_bias": pspec("model"),
+        "a_log": pspec("model", None),
+        "d_skip": pspec("model"),
+        "out_proj": pspec("model", fsdp),
+    }
+
+
+def _causal_conv(x, w, b, history: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv along time.  x: (B,S,Di), w: (K,Di).
+    ``history``: (B, K-1, Di) left-context (decode rolling window)."""
+    K = w.shape[0]
+    if history is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([history.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return out + b
+
+
+def mamba_mix(params, x, cfg, *, state=None, conv_hist=None, return_state=False):
+    """x: (B,S,D) -> (B,S,D).  With ``state``/``conv_hist`` given, continues
+    from a decode cache; with ``return_state`` also returns the new cache."""
+    B, S, D = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = shard(xin, ("pod", "data"), SEQ, HEADS)
+    xc = jax.nn.silu(_causal_conv(xin, params["conv_w"], params["conv_b"],
+                                  conv_hist))
+    dbl = xc @ params["x_proj"]
+    dt, bmat, cmat = jnp.split(dbl, [cfg.dt_rank, cfg.dt_rank + n], axis=-1)
+    dt = jax.nn.softplus((dt @ params["dt_proj"]).astype(jnp.float32)
+                         + params["dt_bias"])                     # (B,S,di)
+    a = -jnp.exp(params["a_log"])                                 # (di,n)
+    da = jnp.exp(dt[..., None] * a)                               # (B,S,di,n)
+    dbx = (dt[..., None] * bmat[:, :, None, :].astype(jnp.float32)
+           * xc[..., None].astype(jnp.float32))                   # (B,S,di,n)
+    h0 = state if state is not None else jnp.zeros((B, di, n), jnp.float32)
+    if S == 1:                                                    # decode fast path
+        h_last = da[:, 0] * h0 + dbx[:, 0]
+        hs = h_last[:, None]
+    else:
+        hs, h_last = linear_scan_chunked(da, dbx, h0, chunk=128,
+                                         exact=cfg.exact_costs)
+    y = jnp.einsum("bsdn,bsn->bsd", hs,
+                   cmat.astype(jnp.float32))                      # (B,S,di)
+    y = (y + params["d_skip"] * xc.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    if return_state:
+        K = params["conv_w"].shape[0]
+        if conv_hist is None:
+            xin_pad = jnp.pad(xin, ((0, 0), (K - 1, 0), (0, 0)))
+        else:
+            xin_pad = jnp.concatenate([conv_hist.astype(xin.dtype), xin], 1)
+        new_hist = xin_pad[:, -(K - 1):]
+        return out, (h_last, new_hist)
+    return out
+
+
+def mamba_ref_sequential(params, x, cfg):
+    """Step-by-step oracle (python loop over time) for tests."""
+    B, S, D = x.shape
+    state = jnp.zeros((B, cfg.d_inner, cfg.ssm_state), jnp.float32)
+    hist = jnp.zeros((B, cfg.ssm_conv - 1, cfg.d_inner), x.dtype)
+    outs = []
+    for t in range(S):
+        o, (state, hist) = mamba_mix(params, x[:, t:t + 1], cfg, state=state,
+                                     conv_hist=hist, return_state=True)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)

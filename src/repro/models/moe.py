@@ -1,0 +1,239 @@
+"""Mixture-of-Experts FFN with capacity-bounded index dispatch.
+
+Top-k routing (dbrx: 16e top-4; llama4: 128e top-1 + shared expert) with the
+scatter/gather formulation: tokens are placed into per-expert capacity slots
+(position = running count of earlier tokens picking the same expert); tokens
+beyond capacity are dropped (their residual passes through).  Under the
+production mesh the expert dimension is sharded over ``model`` (EP) and the
+token dimension over ``data``/``pod`` (DP) — dispatch stays local per data
+shard, expert compute is fully local in (expert, d_ff), and XLA materializes
+the token shuffle as collective-permute/all-to-all on the real topology.
+
+This mirrors the paper's *weight-buffer capacity* check: an expert's
+parameters are pinned HBM-resident on their `model` shard; the router's
+capacity factor bounds the on-chip activation working set exactly like the
+receptive-field rule bounds the fused group's activation buffer.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import act_fn, dense_init, pspec, shard
+
+
+def moe_init(key, cfg, dtype) -> Dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    keys = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(d)
+    params = {
+        "router": dense_init(keys[0], d, e, jnp.float32),   # router in fp32
+        "w_gate": (jax.random.normal(keys[1], (e, d, f)) * scale).astype(dtype),
+        "w_up": (jax.random.normal(keys[2], (e, d, f)) * scale).astype(dtype),
+        "w_down": (jax.random.normal(keys[3], (e, f, d))
+                   / math.sqrt(f)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        ks = jax.random.split(keys[4], 3)
+        params["shared"] = {
+            "w_gate": dense_init(ks[0], d, cfg.n_shared_experts * f, dtype),
+            "w_up": dense_init(ks[1], d, cfg.n_shared_experts * f, dtype),
+            "w_down": dense_init(ks[2], cfg.n_shared_experts * f, d, dtype),
+        }
+    return params
+
+
+def moe_param_specs(cfg) -> Dict:
+    fsdp = ("pod", "data")
+    specs = {
+        "router": pspec(None, "model"),
+        "w_gate": pspec("model", fsdp, None),
+        "w_up": pspec("model", fsdp, None),
+        "w_down": pspec("model", None, fsdp),
+    }
+    if cfg.n_shared_experts:
+        specs["shared"] = {
+            "w_gate": pspec(fsdp, "model"),
+            "w_up": pspec(fsdp, "model"),
+            "w_down": pspec("model", fsdp),
+        }
+    return specs
+
+
+def _num_batch_shards() -> int:
+    from repro.models.common import _axis_size
+    return max(_axis_size("pod") * _axis_size("data"), 1)
+
+
+def moe_apply(params, x, cfg, act="silu"):
+    """x: (B, S, D) -> (B, S, D).  Returns (y, aux_loss).
+
+    ``cfg.moe_impl``:
+    * ``a2a``     — sort-based dispatch local to each data shard, buffers
+      resharded group<->expert (the real MoE all-to-all; per-device traffic
+      = only the shard's dispatched rows).  Default.
+    * ``global``  — global scatter/gather dispatch (simpler, but GSPMD turns
+      the combine into a one-hot dot and the reshards into whole-buffer
+      all-gathers; kept for the §Perf comparison).
+    """
+    if cfg.moe_impl == "a2a":
+        return _moe_apply_a2a(params, x, cfg, act)
+    return _moe_apply_global(params, x, cfg, act)
+
+
+def _aux_loss(probs, sel, E):
+    """Switch-style load-balance loss."""
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(sel[..., 0], E, dtype=jnp.float32).reshape(-1, E),
+        axis=0)
+    frac_probs = jnp.mean(probs.reshape(-1, E), axis=0)
+    return E * jnp.sum(frac_tokens * frac_probs)
+
+
+def _moe_apply_a2a(params, x, cfg, act="silu"):
+    """Sorted local dispatch + expert all-to-all (MegaBlocks/MaxText-style,
+    EXPERIMENTS.md §Perf iteration 3)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    N = B * S
+    G = _num_batch_shards()
+    if N % G:
+        G = 1
+    nl = N // G
+    cap = int(math.ceil(cfg.capacity_factor * nl * K / E))
+    xt = shard(x.reshape(G, nl, D), ("pod", "data"), None, None)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])        # (G, nl, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, sel = jax.lax.top_k(probs, K)                          # (G, nl, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    M = nl * K
+    flat_e = sel.reshape(G, M)
+    order = jnp.argsort(flat_e, axis=1, stable=True)             # (G, M)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    idx = jnp.broadcast_to(jnp.arange(M)[None], (G, M))
+    is_start = jnp.concatenate(
+        [jnp.ones((G, 1), bool), sorted_e[:, 1:] != sorted_e[:, :-1]], axis=1)
+    run_start = jnp.where(is_start, idx, 0)
+    seg_start = jax.lax.associative_scan(jnp.maximum, run_start, axis=1)
+    pos = idx - seg_start                                        # rank in expert
+    keep = pos < cap
+    slot = jnp.where(keep, sorted_e * cap + pos, E * cap)        # drop bin
+    token = order // K                                           # (G, M)
+
+    xsorted = jnp.take_along_axis(xt, token[..., None], axis=1)  # local gather
+    upd = jnp.where(keep[..., None], xsorted, 0).astype(x.dtype)
+    buf = jax.vmap(lambda b, s, v: b.at[s].add(v))(
+        jnp.zeros((G, E * cap + 1, D), x.dtype), slot, upd)      # local scatter
+    buf = buf[:, :-1].reshape(G, E, cap, D)
+    # group->expert reshard: THE all-to-all (each device keeps its E-slice)
+    buf = shard(buf, ("pod", "data"), "model", None, None)
+
+    a = act_fn(act)
+    h = a(jnp.einsum("gecd,edf->gecf", buf, params["w_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", buf, params["w_up"])
+    h = shard(h, ("pod", "data"), "model", None, None)
+    out = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+    # expert->group reshard back (return all-to-all)
+    out = shard(out, ("pod", "data"), None, None, None)
+
+    rows = out.reshape(G, E * cap, D)
+    vals = jnp.take_along_axis(rows, jnp.clip(slot, 0, E * cap - 1)[..., None],
+                               axis=1)                           # local gather
+    gate_sorted = jnp.take_along_axis(gate.reshape(G, M), order, axis=1)
+    contrib = jnp.where(keep[..., None], vals, 0) \
+        * gate_sorted[..., None].astype(x.dtype)
+    y = jax.vmap(lambda z, t, v: z.at[t].add(v))(
+        jnp.zeros((G, nl, D), x.dtype), token, contrib)          # local scatter
+
+    y = y.reshape(B, S, D)
+    if cfg.n_shared_experts:
+        sh = params["shared"]
+        x2 = x.reshape(N, D)
+        hs = a(x2 @ sh["w_gate"]) * (x2 @ sh["w_up"])
+        y = y + (hs @ sh["w_down"]).reshape(B, S, D)
+    return y, _aux_loss(probs, sel, E)
+
+
+def _moe_apply_global(params, x, cfg, act="silu"):
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    N = B * S
+    cap = int(math.ceil(cfg.capacity_factor * N * K / E))
+    xt = x.reshape(N, D)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])          # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, sel = jax.lax.top_k(probs, K)                            # (N, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) in its expert queue ------------------------
+    flat_sel = sel.reshape(-1)                                     # (N*K,)
+    onehot = jax.nn.one_hot(flat_sel, E, dtype=jnp.int32)          # (N*K, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot                 # exclusive
+    pos = jnp.take_along_axis(pos_in_e, flat_sel[:, None], axis=1)[:, 0]
+    keep = pos < cap
+    slot = jnp.where(keep, flat_sel * cap + pos, E * cap)          # overflow bin
+
+    # scatter tokens into expert buffers ------------------------------------------
+    xrep = jnp.repeat(xt, K, axis=0)                               # (N*K, D)
+    buf = jnp.zeros((E * cap + 1, D), x.dtype).at[slot].add(xrep)
+    buf = buf[:-1].reshape(E, cap, D)
+    # EP over `model` AND capacity over the batch axes: without the latter
+    # the expert GEMM replicates across data shards (16x wasted MXU work —
+    # found via HLO flops 12x above analytic; EXPERIMENTS.md §Perf iter 1)
+    buf = shard(buf, "model", ("pod", "data"), None)
+
+    # expert FFN (swiglu), local in (E/model, cap/data) x (E, D, F) ------------------
+    a = act_fn(act)
+    h = a(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    h = shard(h, "model", ("pod", "data"), None)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    out_buf = shard(out_buf, "model", ("pod", "data"), None)
+
+    # gather back + combine with gates ----------------------------------------------
+    out_flat = out_buf.reshape(E * cap, D)
+    out_tok = jnp.where(keep[:, None], out_flat[jnp.clip(slot, 0, E * cap - 1)],
+                        0.0)                                        # (N*K, D)
+    gates = gate.reshape(-1)[:, None].astype(x.dtype)
+    y = (out_tok * gates).reshape(N, K, D).sum(axis=1)
+
+    if cfg.n_shared_experts:
+        sh = params["shared"]
+        hs = a(xt @ sh["w_gate"]) * (xt @ sh["w_up"])
+        y = y + hs @ sh["w_down"]
+
+    # load-balance aux loss (Switch): E * sum(frac_tokens * frac_probs)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(sel[:, 0], E, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return y.reshape(B, S, D), aux
+
+
+def moe_ref(params, x, cfg, act="silu"):
+    """Dense oracle: every token through every expert, gated combine (no
+    capacity drops).  Used by tests on tiny shapes."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    xt = x.reshape(-1, D)
+    logits = xt.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gate, sel = jax.lax.top_k(probs, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    a = act_fn(act)
+    h = a(jnp.einsum("nd,edf->enf", xt, params["w_gate"])) \
+        * jnp.einsum("nd,edf->enf", xt, params["w_up"])
+    per_e = jnp.einsum("enf,efd->end", h, params["w_down"])        # (E, N, D)
+    mask = jax.nn.one_hot(sel, E, dtype=jnp.float32)               # (N, K, E)
+    w = (mask * gate[..., None]).sum(1)                            # (N, E)
+    y = jnp.einsum("ne,end->nd", w.astype(x.dtype), per_e)
+    if cfg.n_shared_experts:
+        sh = params["shared"]
+        y = y + (a(xt @ sh["w_gate"]) * (xt @ sh["w_up"])) @ sh["w_down"]
+    return y.reshape(B, S, D)

@@ -1,0 +1,110 @@
+"""RG-LRU recurrent block (recurrentgemma-2b / Griffin [arXiv:2402.19427]).
+
+Recurrence (eq. 1-4 of the paper):
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = exp(c * r_t * log(a_hat)),  log(a_hat) = -softplus(Lambda), c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The full Griffin *recurrent block* is: linear (D->W) on two branches, a
+temporal conv (width 4) on the recurrent branch, the RG-LRU, and a gated
+output projection (W->D).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import SEQ, HEADS, dense_init, pspec, shard
+from repro.models.mamba import _causal_conv
+from repro.models.scan_ops import linear_scan_chunked
+
+_C = 8.0
+
+
+def rglru_init(key, cfg, dtype) -> Dict:
+    d, w, k = cfg.d_model, cfg.rnn_width, cfg.ssm_conv
+    keys = jax.random.split(key, 6)
+    # init so a^c ~ uniform(0.9, 0.999) as in the paper
+    u = jax.random.uniform(keys[4], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))       # softplus^-1(-log u / c)
+    return {
+        "in_x": dense_init(keys[0], d, w, dtype),
+        "in_gate": dense_init(keys[1], d, w, dtype),
+        "conv_w": (jax.random.normal(keys[2], (k, w)) / math.sqrt(k)
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": dense_init(keys[3], w, w, dtype),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": dense_init(keys[5], w, w, dtype),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lambda": lam.astype(jnp.float32),
+        "out_proj": dense_init(jax.random.fold_in(key, 7), w, d, dtype),
+    }
+
+
+def rglru_param_specs(cfg) -> Dict:
+    fsdp = ("pod", "data")
+    return {
+        "in_x": pspec(fsdp, "model"),
+        "in_gate": pspec(fsdp, "model"),
+        "conv_w": pspec(None, "model"),
+        "conv_b": pspec("model"),
+        "w_a": pspec(None, "model"),
+        "b_a": pspec("model"),
+        "w_i": pspec(None, "model"),
+        "b_i": pspec("model"),
+        "lambda": pspec("model"),
+        "out_proj": pspec("model", fsdp),
+    }
+
+
+def rglru_mix(params, x, cfg, *, state=None, conv_hist=None,
+              return_state=False):
+    """x: (B,S,D) -> (B,S,D); optional decode cache (h, conv history)."""
+    B, S, D = x.shape
+    w = cfg.rnn_width
+    xb = x @ params["in_x"]
+    gate = jax.nn.gelu(x @ params["in_gate"])
+    xb = shard(xb, ("pod", "data"), SEQ, HEADS)
+    xc = _causal_conv(xb, params["conv_w"], params["conv_b"], conv_hist)
+
+    r = jax.nn.sigmoid((xc @ params["w_a"]).astype(jnp.float32)
+                       + params["b_a"])
+    i = jax.nn.sigmoid((xc @ params["w_i"]).astype(jnp.float32)
+                       + params["b_i"])
+    log_a_hat = -jax.nn.softplus(params["lambda"])           # (w,)
+    a = jnp.exp(_C * r * log_a_hat)                          # (B,S,w) fp32
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * xc.astype(jnp.float32)
+    h0 = state if state is not None else jnp.zeros((B, w), jnp.float32)
+    if S == 1:
+        h_last = a[:, 0] * h0 + b[:, 0]
+        hs = h_last[:, None]
+    else:
+        hs, h_last = linear_scan_chunked(a, b, h0, chunk=256,
+                                         exact=cfg.exact_costs)
+    y = (hs.astype(x.dtype) * gate) @ params["out_proj"]
+    if return_state:
+        K = params["conv_w"].shape[0]
+        if conv_hist is None:
+            xp = jnp.pad(xb, ((0, 0), (K - 1, 0), (0, 0)))
+        else:
+            xp = jnp.concatenate([conv_hist.astype(xb.dtype), xb], 1)
+        return y, (h_last, xp[:, -(K - 1):])
+    return y
+
+
+def rglru_ref_sequential(params, x, cfg):
+    """Step-by-step oracle for tests."""
+    B, S, D = x.shape
+    state = jnp.zeros((B, cfg.rnn_width), jnp.float32)
+    hist = jnp.zeros((B, cfg.ssm_conv - 1, cfg.rnn_width), x.dtype)
+    outs = []
+    for t in range(S):
+        o, (state, hist) = rglru_mix(params, x[:, t:t + 1], cfg, state=state,
+                                     conv_hist=hist, return_state=True)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,60 @@
+"""Chunked linear recurrence h_t = a_t * h_{t-1} + b_t (XLA path).
+
+The full (B, S, ...) coefficient tensors of an SSM scan can dwarf HBM at real
+sizes, so — mirroring the paper's receptive-field tiling — we stream the time
+axis in chunks: ``lax.scan`` over chunks carrying the state, with a parallel
+``associative_scan`` inside each chunk.  The Pallas kernels in
+``repro/kernels`` are the TPU-native version of the same blocking.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a2 * a1, a2 * b1 + b2
+
+
+def linear_scan(a, b, h0):
+    """Exact associative scan over axis 1.  a, b: (B, S, ...); h0: (B, ...)."""
+    # fold h0 into the first step
+    b = b.at[:, 0].set(a[:, 0] * h0 + b[:, 0])
+    a = a.at[:, 0].set(jnp.zeros_like(a[:, 0]))
+    av, bv = jax.lax.associative_scan(_combine, (a, b), axis=1)
+    return bv, bv[:, -1]
+
+
+def linear_scan_chunked(a, b, h0, chunk: int = 128, exact: bool = False):
+    """Same result as :func:`linear_scan`, O(chunk) live coefficients.
+    ``exact``: unroll the outer chunk scan (and widen chunks) so
+    HLO cost_analysis counts every iteration — dry-run cost mode only."""
+    if exact:
+        chunk = max(chunk, 2048)
+    B, S = a.shape[:2]
+    if S <= chunk:
+        return linear_scan(a, b, h0)
+    nb = -(-S // chunk)
+    pad = nb * chunk - S
+    if pad:
+        a = jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2),
+                    constant_values=1.0)
+        b = jnp.pad(b, [(0, 0), (0, pad)] + [(0, 0)] * (b.ndim - 2))
+    ac = jnp.moveaxis(a.reshape((B, nb, chunk) + a.shape[2:]), 1, 0)
+    bc = jnp.moveaxis(b.reshape((B, nb, chunk) + b.shape[2:]), 1, 0)
+
+    def body(h, ab):
+        ai, bi = ab
+        hs, h_last = linear_scan(ai, bi, h)
+        return h_last, hs
+
+    h_final, hs = jax.lax.scan(body, h0, (ac, bc),
+                               unroll=nb if exact else 1)
+    hs = jnp.moveaxis(hs, 0, 1).reshape((B, nb * chunk) + a.shape[2:])
+    if pad:
+        h_final = hs[:, S - 1]
+    return hs[:, :S], h_final

@@ -1,0 +1,672 @@
+"""Generic decoder-LM assembly for all ten architectures.
+
+A config's layer stack is grouped into *segments*: maximal runs of a repeated
+layer-kind pattern (dense: ``("attn",) x L``; llama4: ``("attn_chunk" x3,
+"attn_global") x 12``; recurrentgemma: ``("rglru","rglru","attn_local") x 8 +
+("rglru","rglru")``).  Per-segment parameters are stacked on a leading
+repeat axis and applied with ``lax.scan`` — one compiled layer body per
+segment regardless of depth, which keeps the 64-layer dry-runs compilable.
+
+All functions are pure; caches are explicit pytrees.  Sharding is expressed
+through ``param_pspecs`` (consumed by pjit) plus in-graph constraints
+(Megatron-style TP: heads/d_ff/experts over ``model``, batch over
+``pod``x``data``, FSDP parameter sharding over the batch axes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models.common import (BATCH, HEADS, SEQ, dense_init, dtype_of,
+                                 embed_init, norm_apply, norm_init,
+                                 apply_rope, pspec, shard, sharding_mode)
+from repro.models.mamba import mamba_init, mamba_mix, mamba_param_specs
+from repro.models.moe import moe_apply, moe_init, moe_param_specs, moe_ref
+from repro.models.rglru import rglru_init, rglru_mix, rglru_param_specs
+
+FSDP = BATCH   # parameter sharding axes (ZeRO-3 over the data axes)
+
+
+# ---- segments ---------------------------------------------------------------------------
+
+def segments(cfg: ModelConfig) -> List[Tuple[Tuple[str, ...], int]]:
+    kinds = list(cfg.layer_kinds())
+    if cfg.block_pattern or (cfg.attn_chunk and cfg.global_every):
+        plen = len(cfg.block_pattern) or cfg.global_every
+    elif cfg.n_experts and cfg.moe_every > 1:
+        plen = cfg.moe_every
+    else:
+        plen = 1
+    if cfg.n_experts and cfg.moe_every > 1:
+        assert plen % cfg.moe_every == 0, \
+            "pattern length must be a multiple of moe_every"
+    if plen > 1:
+        reps = len(kinds) // plen
+        segs = []
+        if reps:
+            segs.append((tuple(kinds[:plen]), reps))
+        if len(kinds) % plen:
+            segs.append((tuple(kinds[reps * plen:]), 1))
+        return segs
+    return [(tuple(kinds[:1]), len(kinds))]
+
+
+# ---- per-layer init ------------------------------------------------------------------------
+
+def _attn_init(key, cfg, dtype):
+    d, hq, hkv, hd = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                      cfg.resolved_head_dim)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, hq * hd, dtype),
+        "wk": dense_init(ks[1], d, hkv * hd, dtype),
+        "wv": dense_init(ks[2], d, hkv * hd, dtype),
+        "wo": dense_init(ks[3], hq * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p.update(bq=jnp.zeros((hq * hd,), dtype),
+                 bk=jnp.zeros((hkv * hd,), dtype),
+                 bv=jnp.zeros((hkv * hd,), dtype))
+    return p
+
+
+def _attn_specs(cfg):
+    p = {"wq": pspec(FSDP, "model"), "wk": pspec(FSDP, "model"),
+         "wv": pspec(FSDP, "model"), "wo": pspec("model", FSDP)}
+    if cfg.qkv_bias:
+        p.update(bq=pspec("model"), bk=pspec("model"), bv=pspec("model"))
+    return p
+
+
+def _mlp_init(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {"w_gate": dense_init(ks[0], d, f, dtype),
+                "w_up": dense_init(ks[1], d, f, dtype),
+                "w_down": dense_init(ks[2], f, d, dtype)}
+    return {"w_up": dense_init(ks[0], d, f, dtype),
+            "w_down": dense_init(ks[1], f, d, dtype)}
+
+
+def _mlp_specs(cfg):
+    p = {"w_up": pspec(FSDP, "model"), "w_down": pspec("model", FSDP)}
+    if cfg.mlp in ("swiglu", "geglu"):
+        p["w_gate"] = pspec(FSDP, "model")
+    return p
+
+
+def _use_moe(cfg: ModelConfig, pattern_pos: int) -> bool:
+    """MoE on every ``moe_every``-th layer (llama4 interleaves MoE/dense).
+    Decided by position within the repeated pattern — valid because the
+    pattern length is a multiple of ``moe_every`` (asserted in segments)."""
+    if not cfg.n_experts:
+        return False
+    return (pattern_pos + 1) % cfg.moe_every == 0
+
+
+def _layer_init(key, kind: str, cfg: ModelConfig, dtype, with_cross=False,
+                pattern_pos: int = 0):
+    ks = jax.random.split(key, 5)
+    p: Dict[str, Any] = {"norm1": norm_init(cfg.norm, cfg.d_model, dtype)}
+    if kind.startswith("attn"):
+        p["attn"] = _attn_init(ks[0], cfg, dtype)
+    elif kind == "mamba":
+        p["mamba"] = mamba_init(ks[0], cfg, dtype)
+    elif kind == "rglru":
+        p["rglru"] = rglru_init(ks[0], cfg, dtype)
+    if with_cross:
+        p["norm_cross"] = norm_init(cfg.norm, cfg.d_model, dtype)
+        p["cross"] = _attn_init(ks[1], cfg, dtype)
+    if cfg.family != "ssm":
+        p["norm2"] = norm_init(cfg.norm, cfg.d_model, dtype)
+        if _use_moe(cfg, pattern_pos):
+            p["moe"] = moe_init(ks[2], cfg, dtype)
+        else:
+            p["mlp"] = _mlp_init(ks[2], cfg, dtype)
+    return p
+
+
+def _layer_specs(kind: str, cfg: ModelConfig, with_cross=False,
+                 pattern_pos: int = 0):
+    norm_spec = {k: pspec(None) for k in
+                 (("scale", "bias") if cfg.norm == "layernorm" else ("scale",))}
+    p: Dict[str, Any] = {"norm1": dict(norm_spec)}
+    if kind.startswith("attn"):
+        p["attn"] = _attn_specs(cfg)
+    elif kind == "mamba":
+        p["mamba"] = mamba_param_specs(cfg)
+    elif kind == "rglru":
+        p["rglru"] = rglru_param_specs(cfg)
+    if with_cross:
+        p["norm_cross"] = dict(norm_spec)
+        p["cross"] = _attn_specs(cfg)
+    if cfg.family != "ssm":
+        p["norm2"] = dict(norm_spec)
+        if _use_moe(cfg, pattern_pos):
+            p["moe"] = moe_param_specs(cfg)
+        else:
+            p["mlp"] = _mlp_specs(cfg)
+    return p
+
+
+# ---- model init -----------------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    dtype = dtype_of(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[0], cfg.vocab, cfg.d_model, dtype),
+        "final_norm": norm_init(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[1], cfg.d_model, cfg.vocab, dtype)
+
+    def stacked(key, pattern, reps, with_cross=False):
+        seg = {}
+        for pi, kind in enumerate(pattern):
+            lkeys = jax.random.split(jax.random.fold_in(key, pi), reps)
+            leaves = [_layer_init(k, kind, cfg, dtype, with_cross,
+                                  pattern_pos=pi) for k in lkeys]
+            seg[f"pos{pi}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *leaves)
+        return seg
+
+    params["segments"] = {
+        f"seg{si}": stacked(jax.random.fold_in(keys[2], si), pat, reps,
+                            with_cross=cfg.is_encdec)
+        for si, (pat, reps) in enumerate(segments(cfg))
+    }
+    if cfg.is_encdec:
+        params["enc"] = {
+            "pos_embed": embed_init(keys[3], cfg.enc_seq, cfg.d_model, dtype),
+            "segments": {"seg0": {
+                "pos0": jax.tree.map(
+                    lambda *xs: jnp.stack(xs),
+                    *[_layer_init(k, "attn_bidir", cfg, dtype)
+                      for k in jax.random.split(keys[4], cfg.n_enc_layers)])}},
+            "final_norm": norm_init(cfg.norm, cfg.d_model, dtype),
+        }
+        params["dec_pos_embed"] = embed_init(keys[5], 32_768, cfg.d_model,
+                                             dtype)
+    if cfg.img_tokens:
+        params["img_proj"] = dense_init(keys[6], cfg.d_model, cfg.d_model,
+                                        dtype)
+    return params
+
+
+def param_pspecs(cfg: ModelConfig) -> Dict:
+    specs: Dict[str, Any] = {
+        "embed": pspec("model", FSDP),
+        "final_norm": {k: pspec(None) for k in
+                       (("scale", "bias") if cfg.norm == "layernorm"
+                        else ("scale",))},
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = pspec(FSDP, "model")
+    norm_spec = specs["final_norm"]
+
+    def seg_specs(pattern, with_cross=False):
+        return {f"pos{pi}": _layer_specs(kind, cfg, with_cross,
+                                         pattern_pos=pi)
+                for pi, kind in enumerate(pattern)}
+
+    specs["segments"] = {
+        f"seg{si}": seg_specs(pat, with_cross=cfg.is_encdec)
+        for si, (pat, _) in enumerate(segments(cfg))
+    }
+    if cfg.is_encdec:
+        specs["enc"] = {
+            "pos_embed": pspec(None, FSDP),
+            "segments": {"seg0": seg_specs(("attn_bidir",))},
+            "final_norm": dict(norm_spec),
+        }
+        specs["dec_pos_embed"] = pspec(None, FSDP)
+    if cfg.img_tokens:
+        specs["img_proj"] = pspec(FSDP, "model")
+    if sharding_mode() == "fsdp":
+        # ZeRO-3: every >=2D parameter fully sharded on dim 0 over ALL mesh
+        # axes (gathered per layer inside the step); 1D tensors replicated.
+        # Activations are sequence-parallel instead of head-parallel (SEQ/
+        # HEADS sentinels in the in-graph constraints).
+        all_ax = ("pod", "data", "model")
+
+        def to_fsdp(s: P) -> P:
+            entries = tuple(s)
+            if len(entries) < 2:
+                return pspec(None) if entries else s
+            return pspec(all_ax, *([None] * (len(entries) - 1)))
+
+        specs = jax.tree.map(to_fsdp, specs,
+                             is_leaf=lambda x: isinstance(x, P))
+
+    # stacked leaves keep layer axis unsharded: prepend None
+    def add_layer_axis(tree):
+        return jax.tree.map(lambda s: P(*((None,) + tuple(s))), tree)
+    specs["segments"] = add_layer_axis(specs["segments"])
+    if cfg.is_encdec:
+        specs["enc"]["segments"] = add_layer_axis(specs["enc"]["segments"])
+    return specs
+
+
+# ---- layer application --------------------------------------------------------------------------------
+
+def _attn_apply(p, x, cfg: ModelConfig, kind: str, q_pos, cache=None,
+                kv_src=None, impl="auto"):
+    """Returns (out, new_cache).  ``kv_src``: (states, positions) to project
+    K/V from — cross-attention to the encoder (bidirectional, no rope)."""
+    B, S, D = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"] + (p.get("bq", 0))).reshape(B, S, hq, hd)
+    q = shard(q, BATCH, SEQ, HEADS, None)
+    window = cfg.attn_window if kind == "attn_local" else 0
+    chunk = cfg.attn_chunk if kind == "attn_chunk" else 0
+    causal = kind not in ("attn_bidir", "attn_cross")
+    rope = kind not in ("attn_bidir", "attn_cross") and not cfg.is_encdec
+
+    if kv_src is not None:
+        src, k_pos = kv_src
+        T = src.shape[1]
+        k = (src @ p["wk"]).reshape(B, T, hkv, hd)
+        v = (src @ p["wv"]).reshape(B, T, hkv, hd)
+        new_cache = cache
+    else:
+        k = (x @ p["wk"] + (p.get("bk", 0))).reshape(B, S, hkv, hd)
+        v = (x @ p["wv"] + (p.get("bv", 0))).reshape(B, S, hkv, hd)
+        k = shard(k, BATCH, SEQ, HEADS, None)
+        v = shard(v, BATCH, SEQ, HEADS, None)
+        if rope:
+            q = apply_rope(q, q_pos[None], fraction=cfg.rope_fraction,
+                           theta=cfg.rope_theta)
+            k = apply_rope(k, q_pos[None], fraction=cfg.rope_fraction,
+                           theta=cfg.rope_theta)
+        if cache is None:
+            k_pos = q_pos
+            new_cache = None
+        else:
+            L_buf = cache["k"].shape[1]
+            # rolling write; if this call covers more than the buffer, only
+            # the last L_buf tokens matter (S and L_buf are static)
+            kw, vw, pw = k, v, q_pos
+            if S > L_buf:
+                kw, vw, pw = k[:, -L_buf:], v[:, -L_buf:], q_pos[-L_buf:]
+            slots = jnp.mod(pw, L_buf)
+            ck = cache["k"].at[:, slots].set(kw.astype(cache["k"].dtype))
+            cv = cache["v"].at[:, slots].set(vw.astype(cache["v"].dtype))
+            kpos = cache["kpos"].at[slots].set(pw)
+            new_cache = {"k": ck, "v": cv, "kpos": kpos}
+            if S > 1:
+                # prefill: attend over the full current K/V (the rolling
+                # buffers only retain the tail for future decode steps)
+                k_pos = q_pos
+            else:
+                k, v, k_pos = ck, cv, kpos
+
+    out = attn_lib.attention(q, k.astype(q.dtype), v.astype(q.dtype),
+                             q_pos, k_pos, causal=causal, window=window,
+                             chunk=chunk, softcap=cfg.attn_logit_softcap,
+                             impl=impl, unroll=cfg.exact_costs)
+    out = out.reshape(B, S, hq * hd) @ p["wo"]
+    return out, new_cache
+
+
+def _mlp_apply(p, x, cfg):
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif cfg.mlp == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    h = shard(h, BATCH, SEQ, HEADS)
+    return h @ p["w_down"]
+
+
+def _layer_apply(p, x, cfg: ModelConfig, kind: str, q_pos, cache=None,
+                 enc_kv=None, impl="auto"):
+    """Pre-norm residual layer.  Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = norm_apply(cfg.norm, p["norm1"], x)
+    if kind.startswith("attn"):
+        mix, new_cache = _attn_apply(p["attn"], h, cfg, kind, q_pos,
+                                     cache=None if cache is None
+                                     else cache.get("attn"), impl=impl)
+    elif kind == "mamba":
+        if cache is None:
+            mix = mamba_mix(p["mamba"], h, cfg)
+            new_cache = None
+        else:
+            mix, (st, hist) = mamba_mix(
+                p["mamba"], h, cfg, state=cache["ssm"], conv_hist=cache["conv"],
+                return_state=True)
+            new_cache = {"ssm": st, "conv": hist}
+    elif kind == "rglru":
+        if cache is None:
+            mix = rglru_mix(p["rglru"], h, cfg)
+            new_cache = None
+        else:
+            mix, (st, hist) = rglru_mix(
+                p["rglru"], h, cfg, state=cache["h"], conv_hist=cache["conv"],
+                return_state=True)
+            new_cache = {"h": st, "conv": hist}
+    else:
+        raise ValueError(kind)
+    if kind.startswith("attn") and cache is not None:
+        new_cache = {"attn": new_cache}
+    x = x + mix
+    if "cross" in p and enc_kv is not None:
+        h = norm_apply(cfg.norm, p["norm_cross"], x)
+        mix, _ = _attn_apply(p["cross"], h, cfg, "attn_cross", q_pos,
+                             kv_src=enc_kv, impl=impl)
+        x = x + mix
+    if cfg.family != "ssm":
+        h = norm_apply(cfg.norm, p["norm2"], x)
+        if "moe" in p:
+            mlp_out, aux = moe_apply(p["moe"], h, cfg)
+        else:
+            mlp_out = _mlp_apply(p["mlp"], h, cfg)
+        x = x + mlp_out
+    x = shard(x, BATCH, SEQ, None)
+    return x, new_cache, aux
+
+
+def _remat_wrap(fn, cfg):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "selective":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def _run_segments(params_segs, x, cfg, seg_list, q_pos, caches=None,
+                  enc_kv=None, impl="auto"):
+    """Apply all segments with lax.scan over each segment's repeat axis.
+    Returns (x, new_caches, aux_total)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: Dict[str, Any] = {}
+    for si, (pattern, reps) in enumerate(seg_list):
+        seg_p = params_segs[f"seg{si}"]
+        seg_c = None if caches is None else caches[f"seg{si}"]
+
+        def body(carry, scanned):
+            xx, aux = carry
+            layer_p, layer_c = scanned
+            new_c = {}
+            for pi, kind in enumerate(pattern):
+                cc = None if layer_c is None else layer_c[f"pos{pi}"]
+                xx, nc, a = _layer_apply(layer_p[f"pos{pi}"], xx, cfg, kind,
+                                         q_pos, cache=cc, enc_kv=enc_kv,
+                                         impl=impl)
+                new_c[f"pos{pi}"] = nc
+                aux = aux + a
+            return (xx, aux), new_c
+
+        body = _remat_wrap(body, cfg)
+        if not cfg.scan_layers:
+            # unrolled: exact cost_analysis / collective counts (dry-run
+            # cost-extrapolation mode) at the price of HLO size
+            ncs = []
+            for r in range(reps):
+                take = lambda t: jax.tree.map(lambda a: a[r], t)
+                (x, aux_total), nc = body(
+                    (x, aux_total),
+                    (take(seg_p), None if seg_c is None else take(seg_c)))
+                ncs.append(nc)
+            new_caches[f"seg{si}"] = None if seg_c is None else \
+                jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+        elif seg_c is None:
+            (x, aux_total), _ = jax.lax.scan(
+                lambda c, s: (body(c, (s, None))[0], None),
+                (x, aux_total), seg_p)
+            new_caches[f"seg{si}"] = None
+        else:
+            (x, aux_total), nc = jax.lax.scan(
+                lambda c, s: body(c, s), (x, aux_total), (seg_p, seg_c))
+            new_caches[f"seg{si}"] = nc
+    return x, new_caches, aux_total
+
+
+# ---- encoder (whisper) -----------------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, enc_seq, d_model) precomputed conv-stub embeddings."""
+    enc = params["enc"]
+    S = frames.shape[1]
+    x = frames + enc["pos_embed"][None, :S].astype(frames.dtype)
+    pos = jnp.arange(S)
+    x, _, _ = _run_segments(enc["segments"], x,
+                            dataclasses.replace(cfg, n_experts=0,
+                                                is_encdec=False),
+                            [(("attn_bidir",), cfg.n_enc_layers)], pos)
+    return norm_apply(cfg.norm, enc["final_norm"], x)
+
+
+def _enc_kv(params, cfg, enc_out):
+    """Precompute cross-attention K/V once (shared by all decode steps)...
+    projected per-layer inside the scan instead (weights differ per layer), so
+    here we just package the encoder output."""
+    S = enc_out.shape[1]
+    return enc_out, jnp.arange(S)
+
+
+# ---- public forward passes -------------------------------------------------------------------------------------
+
+def _embed_tokens(params, cfg, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return shard(x, BATCH, SEQ, None)
+
+
+def _unembed(params, cfg, x):
+    x = norm_apply(cfg.norm, params["final_norm"], x)
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    return shard(logits, BATCH, SEQ, HEADS)
+
+
+def forward(params, cfg: ModelConfig, batch, impl="auto"):
+    """Training/prefill forward (no cache).  batch keys: tokens (B,S) [+
+    img_embeds (B,N,D) | frames (B,T,D)].  Returns (logits, aux)."""
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, cfg, tokens)
+    if cfg.img_tokens:
+        img = batch["img_embeds"].astype(x.dtype) @ params["img_proj"]
+        x = jnp.concatenate([img, x], axis=1)
+    enc_kv = None
+    if cfg.is_encdec:
+        enc_out = encode(params, cfg, batch["frames"].astype(x.dtype))
+        enc_kv = (enc_out, jnp.arange(enc_out.shape[1]))
+        S = x.shape[1]
+        x = x + params["dec_pos_embed"][None, :S].astype(x.dtype)
+    S = x.shape[1]
+    pos = jnp.arange(S)
+    x, _, aux = _run_segments(params["segments"], x, cfg, segments(cfg), pos,
+                              enc_kv=enc_kv, impl=impl)
+    return _unembed(params, cfg, x), aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch, impl="auto",
+            aux_weight: float = 0.01):
+    """Next-token cross-entropy (+ MoE aux).  Image positions are excluded
+    via the label mask; labels: (B, S_text) aligned with batch['tokens']."""
+    logits, aux = forward(params, cfg, batch, impl=impl)
+    labels = batch["labels"]
+    if cfg.img_tokens:                       # drop image positions
+        logits = logits[:, cfg.img_tokens:]
+    mask = batch.get("loss_mask")
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        ll = ll * mask
+        denom = jnp.maximum(mask.sum(), 1.0)
+    else:
+        denom = float(ll.shape[0] * ll.shape[1])
+    loss = -(ll.sum() / denom)
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+
+# ---- caches / serving -----------------------------------------------------------------------------------
+
+def _cache_buf_len(kind: str, cfg: ModelConfig, max_len: int) -> int:
+    if kind == "attn_local":
+        return min(2 * cfg.attn_window, max_len)   # rolling window buffer
+    if kind == "attn_chunk":
+        return min(cfg.attn_chunk, max_len)        # rolling chunk buffer
+    return max_len                                 # full causal cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict:
+    """Decode caches for every layer, stacked per segment like the params."""
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    caches: Dict[str, Any] = {}
+    for si, (pattern, reps) in enumerate(segments(cfg)):
+        seg = {}
+        for pi, kind in enumerate(pattern):
+            if kind.startswith("attn"):
+                L = _cache_buf_len(kind, cfg, max_len)
+                c = {"attn": {
+                    "k": jnp.zeros((reps, batch, L, hkv, hd), dtype),
+                    "v": jnp.zeros((reps, batch, L, hkv, hd), dtype),
+                    "kpos": jnp.full((reps, L), -1, jnp.int32)}}
+            elif kind == "mamba":
+                c = {"ssm": jnp.zeros((reps, batch, cfg.d_inner,
+                                       cfg.ssm_state), jnp.float32),
+                     "conv": jnp.zeros((reps, batch, cfg.ssm_conv - 1,
+                                        cfg.d_inner), dtype)}
+            elif kind == "rglru":
+                c = {"h": jnp.zeros((reps, batch, cfg.rnn_width),
+                                    jnp.float32),
+                     "conv": jnp.zeros((reps, batch, cfg.ssm_conv - 1,
+                                        cfg.rnn_width), dtype)}
+            else:
+                c = {}
+            seg[f"pos{pi}"] = c
+        caches[f"seg{si}"] = seg
+    return caches
+
+
+def cache_pspecs(cfg: ModelConfig, *, shard_seq: bool = False) -> Dict:
+    """Sharding for decode caches.
+
+    Batch over (pod, data) when it divides; the KV-head dim over ``model``
+    when the arch has enough KV heads, otherwise the *sequence* dim takes
+    the model axis (flash-decoding-style distributed KV: XLA turns the
+    softmax over the sharded sequence into partial reductions + a combine).
+    ``shard_seq``: for global_batch==1 cells (long_500k) the sequence axis
+    also absorbs the batch axes."""
+    from repro.models.common import _axis_size
+    msz = _axis_size("model")
+    heads_shardable = msz > 1 and cfg.n_kv_heads % msz == 0
+    batch_ax = None if shard_seq else BATCH
+    seq_axes: list = list(a for a in ("pod", "data")) if shard_seq else []
+    if not heads_shardable and msz > 1:
+        seq_axes.append("model")
+    seq_ax = tuple(seq_axes) if seq_axes else None
+    head_ax = "model" if heads_shardable else None
+    state_ax = tuple(seq_axes + (["model"] if heads_shardable else [])) \
+        if shard_seq else "model"
+
+    def spec_for(name):
+        if name in ("k", "v"):
+            return pspec(None, batch_ax, seq_ax, head_ax, None)
+        if name == "kpos":
+            return pspec(None, None)
+        if name == "ssm":
+            return pspec(None, batch_ax, state_ax, None)
+        if name == "h":
+            return pspec(None, batch_ax, state_ax)
+        if name == "conv":
+            return pspec(None, batch_ax, None, state_ax)
+        return pspec()
+
+    caches = init_cache_shapes(cfg, 1, 2)    # structure only
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for(path[-1].key), caches)
+
+
+def init_cache_shapes(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype))
+
+
+def prefill(params, cfg: ModelConfig, batch, max_len: int, impl="auto",
+            cache_dtype=jnp.bfloat16):
+    """Run the prompt, returning (last_logits, caches, enc_out?).
+
+    Implemented as forward + bulk cache fill: K/V are recomputed per layer
+    into the cache buffers during the pass (rolling buffers keep the tail)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    caches = init_cache(cfg, B, max_len, cache_dtype)
+    x = _embed_tokens(params, cfg, tokens)
+    if cfg.img_tokens:
+        img = batch["img_embeds"].astype(x.dtype) @ params["img_proj"]
+        x = jnp.concatenate([img, x], axis=1)
+        S = x.shape[1]
+    enc_kv = None
+    if cfg.is_encdec:
+        enc_out = encode(params, cfg, batch["frames"].astype(x.dtype))
+        enc_kv = (enc_out, jnp.arange(enc_out.shape[1]))
+        x = x + params["dec_pos_embed"][None, :S].astype(x.dtype)
+    pos = jnp.arange(S)
+    x, new_caches, _ = _run_segments(params["segments"], x, cfg,
+                                     segments(cfg), pos, caches=caches,
+                                     enc_kv=enc_kv, impl=impl)
+    logits = _unembed(params, cfg, x[:, -1:])
+    return logits, new_caches, enc_kv
+
+
+def decode_step(params, cfg: ModelConfig, token, pos, caches, enc_kv=None,
+                impl="auto"):
+    """One token for the whole batch.  token: (B, 1) int32; pos: () int32.
+    Returns (logits (B,1,V), new_caches)."""
+    x = _embed_tokens(params, cfg, token)
+    if cfg.is_encdec:
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["dec_pos_embed"], pos, 1, axis=0)[None].astype(x.dtype)
+    q_pos = pos[None] if pos.ndim == 0 else pos
+    x, new_caches, _ = _run_segments(params["segments"], x, cfg,
+                                     segments(cfg), q_pos, caches=caches,
+                                     enc_kv=enc_kv, impl=impl)
+    return _unembed(params, cfg, x), new_caches
+
+
+# ---- dry-run input specs ----------------------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape, dtype=jnp.bfloat16) -> Dict:
+    """ShapeDtypeStructs for every model input of a (cfg, shape) cell —
+    weak-type-correct, shardable, no allocation."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch = {"tokens": sds((B, S), jnp.int32),
+                 "labels": sds((B, S), jnp.int32)}
+        if cfg.img_tokens:
+            batch["tokens"] = sds((B, S - cfg.img_tokens), jnp.int32)
+            batch["labels"] = sds((B, S - cfg.img_tokens), jnp.int32)
+            batch["img_embeds"] = sds((B, cfg.img_tokens, cfg.d_model), dtype)
+        if cfg.is_encdec:
+            batch["frames"] = sds((B, cfg.enc_seq, cfg.d_model), dtype)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": sds((B, S), jnp.int32)}
+        if cfg.img_tokens:
+            batch["tokens"] = sds((B, S - cfg.img_tokens), jnp.int32)
+            batch["img_embeds"] = sds((B, cfg.img_tokens, cfg.d_model), dtype)
+        if cfg.is_encdec:
+            batch["frames"] = sds((B, cfg.enc_seq, cfg.d_model), dtype)
+        return batch
+    # decode: one new token against a cache of length S
+    batch = {"token": sds((B, 1), jnp.int32),
+             "pos": sds((), jnp.int32),
+             "caches": init_cache_shapes(cfg, B, S)}
+    if cfg.is_encdec:
+        batch["enc_out"] = sds((B, cfg.enc_seq, cfg.d_model), dtype)
+    return batch

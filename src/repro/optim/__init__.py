@@ -1,0 +1,7 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedules import cosine_schedule
+from repro.optim.grad_compress import (compress_decompress_ef,
+                                       ef_state_init)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "compress_decompress_ef", "ef_state_init"]

@@ -1,0 +1,76 @@
+"""AdamW in pure JAX, with dtype-configurable moments.
+
+Moments live in ``moment_dtype`` (fp32 default; bf16 for the 400B config so
+optimizer state fits the pod — a distributed-memory trick, not a numerics
+default).  The update itself is always computed in fp32.  Optimizer state is
+sharded exactly like the parameters (pjit out_shardings = param specs), which
+is ZeRO-3 for free.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+    dt = jnp.dtype(cfg.moment_dtype)
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * clip
+        mu32 = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+        nu32 = b2 * nu.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = mu32 / c1
+        nhat = nu32 / c2
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        if cfg.weight_decay > 0 and p.ndim >= 2:   # decay matrices only
+            delta = delta + cfg.weight_decay * p32
+        return ((p32 - lr * delta).astype(p.dtype),
+                mu32.astype(dt), nu32.astype(dt))
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = jax.tree.unflatten(treedef, [t[0] for t in flat])
+    new_mu = jax.tree.unflatten(treedef, [t[1] for t in flat])
+    new_nu = jax.tree.unflatten(treedef, [t[2] for t in flat])
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step}
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,4 @@
+from repro.runtime.fault import (FaultConfig, FaultInjector, Watchdog,
+                                 run_with_restarts)
+
+__all__ = ["FaultConfig", "FaultInjector", "Watchdog", "run_with_restarts"]

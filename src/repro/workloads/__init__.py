@@ -1,0 +1,5 @@
+from repro.workloads.cnn_zoo import (build_workload, mobilenet_v3_large,
+                                     resnet50, unet, vgg16, WORKLOADS)
+
+__all__ = ["build_workload", "mobilenet_v3_large", "resnet50", "unet",
+           "vgg16", "WORKLOADS"]

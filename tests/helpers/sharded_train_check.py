@@ -1,0 +1,37 @@
+"""Subprocess helper: verify DP+TP sharded training matches single-device.
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=8 (the test sets
+it); trains the same tiny model on a (data=2, model=4) mesh and on (1, 1),
+then asserts the loss trajectories agree.
+"""
+import os
+import sys
+
+assert "--xla_force_host_platform_device_count=8" in \
+    os.environ.get("XLA_FLAGS", ""), "run via the pytest wrapper"
+
+import dataclasses
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+from repro.configs import get_reduced
+from repro.launch.mesh import make_local_mesh
+from repro.launch.train import TrainRunConfig, train_loop
+
+cfg = dataclasses.replace(get_reduced("qwen2-7b"), param_dtype="float32",
+                          compute_dtype="float32")
+run = TrainRunConfig(cfg=cfg, steps=8, global_batch=8, seq_len=32,
+                     lr=1e-3, log_every=1)
+
+out_sharded = train_loop(run, mesh=make_local_mesh(2, 4), log=lambda *a: None)
+out_single = train_loop(run, mesh=make_local_mesh(1, 1), log=lambda *a: None)
+
+ls = np.array(out_sharded["history"]["loss"])
+l1 = np.array(out_single["history"]["loss"])
+print("sharded:", ls)
+print("single :", l1)
+np.testing.assert_allclose(ls, l1, rtol=2e-4, atol=2e-4)
+print("SHARDED_MATCHES_SINGLE")

@@ -1,0 +1,119 @@
+"""Attention module: path equivalence (dense/blockwise/local), GQA
+grouping, masks, numerical properties (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.attention import (attention, blockwise_attention,
+                                    dense_attention, local_attention)
+
+
+def _qkv(B, S, Hq, Hkv, D, seed=0, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (B, S, Hq, D), dtype),
+            jax.random.normal(ks[1], (B, S, Hkv, D), dtype),
+            jax.random.normal(ks[2], (B, S, Hkv, D), dtype))
+
+
+@given(st.integers(min_value=8, max_value=70),
+       st.sampled_from([(4, 4), (4, 2), (8, 1)]),
+       st.sampled_from([16, 64]))
+@settings(max_examples=12, deadline=None)
+def test_blockwise_equals_dense_causal(S, heads, block):
+    Hq, Hkv = heads
+    q, k, v = _qkv(1, S, Hq, Hkv, 16)
+    pos = jnp.arange(S)
+    d = dense_attention(q, k, v, pos, pos)
+    b = blockwise_attention(q, k, v, pos, pos, block_kv=block)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(b), atol=2e-5,
+                               rtol=2e-5)
+
+
+@given(st.integers(min_value=12, max_value=64),
+       st.sampled_from([4, 8, 16]))
+@settings(max_examples=12, deadline=None)
+def test_local_window_equals_masked_dense(S, W):
+    q, k, v = _qkv(2, S, 4, 2, 16, seed=1)
+    pos = jnp.arange(S)
+    d = dense_attention(q, k, v, pos, pos, window=W)
+    l = local_attention(q, k, v, pos, pos, window=W)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(l), atol=2e-5,
+                               rtol=2e-5)
+
+
+@given(st.integers(min_value=12, max_value=64),
+       st.sampled_from([8, 16, 32]))
+@settings(max_examples=12, deadline=None)
+def test_local_chunk_equals_masked_dense(S, C):
+    q, k, v = _qkv(2, S, 4, 2, 16, seed=2)
+    pos = jnp.arange(S)
+    d = dense_attention(q, k, v, pos, pos, chunk=C)
+    l = local_attention(q, k, v, pos, pos, chunk=C)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(l), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_rows_are_convex_combinations_of_values():
+    """Attention outputs lie in the convex hull of V rows: with V == const c,
+    every output must equal c exactly."""
+    B, S, H, D = 2, 32, 4, 16
+    q, k, _ = _qkv(B, S, H, H, D, seed=3)
+    v = jnp.full((B, S, H, D), 3.25)
+    pos = jnp.arange(S)
+    out = attention(q, k, v, pos, pos, causal=True)
+    np.testing.assert_allclose(np.asarray(out), 3.25, atol=1e-5)
+
+
+def test_causal_prefix_invariance():
+    """Causal attention of a prefix equals the prefix of the full result."""
+    B, S, H, D = 1, 48, 4, 16
+    q, k, v = _qkv(B, S, H, H, D, seed=4)
+    pos = jnp.arange(S)
+    full = dense_attention(q, k, v, pos, pos)
+    half = dense_attention(q[:, :24], k[:, :24], v[:, :24],
+                           pos[:24], pos[:24])
+    np.testing.assert_allclose(np.asarray(full[:, :24]), np.asarray(half),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_gqa_equals_repeated_heads():
+    """GQA result == MHA with KV heads explicitly repeated."""
+    B, S, Hq, Hkv, D = 2, 24, 8, 2, 16
+    q, k, v = _qkv(B, S, Hq, Hkv, D, seed=5)
+    pos = jnp.arange(S)
+    g = dense_attention(q, k, v, pos, pos)
+    kr = jnp.repeat(k, Hq // Hkv, axis=2)
+    vr = jnp.repeat(v, Hq // Hkv, axis=2)
+    m = dense_attention(q, kr, vr, pos, pos)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(m), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_negative_kpos_slots_are_masked():
+    """Cache slots carrying kpos=-1 (never written) contribute nothing."""
+    B, S, H, D = 1, 16, 2, 8
+    q, k, v = _qkv(B, S, H, H, D, seed=6)
+    pos = jnp.arange(S)
+    kpos_holes = pos.at[5].set(-1).at[11].set(-1)
+    out = dense_attention(q, k, v, pos, kpos_holes)
+    # oracle: physically remove those keys
+    keep = np.array([i for i in range(S) if i not in (5, 11)])
+    ref = dense_attention(q, k[:, keep], v[:, keep], pos,
+                          pos[keep])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_softcap_changes_but_keeps_normalization():
+    B, S, H, D = 1, 16, 2, 8
+    q, k, v = _qkv(B, S, H, H, D, seed=7)
+    pos = jnp.arange(S)
+    a = dense_attention(q, k, v, pos, pos, softcap=0.0)
+    b = dense_attention(q, k, v, pos, pos, softcap=5.0)
+    assert float(jnp.abs(a - b).max()) > 1e-6      # cap actually applied
+    vc = jnp.ones_like(v)
+    out = dense_attention(q, k, vc, pos, pos, softcap=5.0)
+    np.testing.assert_allclose(np.asarray(out), 1.0, atol=1e-5)

@@ -1,0 +1,41 @@
+"""Dry-run machinery integration test: run real lower+compile cells at
+reduced scale on an 8-device local mesh (subprocess so the device-count flag
+stays contained)."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run_cell(arch, shape, tmp):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "local", "--reduced", "--out", tmp],
+        env=env, capture_output=True, text=True, timeout=900, cwd=REPO)
+    assert res.returncode == 0, f"stdout:{res.stdout}\nstderr:{res.stderr[-2000:]}"
+    path = os.path.join(tmp, f"{arch}__{shape}__local.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("qwen2-7b", "train_4k"),          # dense train step
+    ("dbrx-132b", "decode_32k"),       # MoE decode with KV cache
+])
+def test_dryrun_cell_compiles_and_reports(arch, shape, tmp_path):
+    art = _run_cell(arch, shape, str(tmp_path))
+    assert art["status"] == "ok"
+    assert art["cost"]["flops"] > 0
+    assert art["cost"]["bytes accessed"] > 0
+    assert art["collectives"]["count"] >= 0
+    assert art["memory"].get("temp_size_bytes") is not None
+    # extrapolation metadata present and coherent
+    assert art["cost_points"]["reps_full"] >= 2
+    assert art["cost"]["flops"] >= art["cost_points"]["a"]["flops"]

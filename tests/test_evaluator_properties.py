@@ -1,0 +1,95 @@
+"""Property-based tests (hypothesis): cost-model invariants over random
+graphs and fusion states."""
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.fusion import FusionState
+from repro.core.ga import GAConfig, run_ga
+from repro.core.graph import Layer, LayerGraph
+from repro.costmodel import SIMBA, Evaluator
+
+
+@st.composite
+def random_conv_graphs(draw):
+    """Chains of 3-7 convs with random dims and occasional residual adds."""
+    n = draw(st.integers(min_value=3, max_value=7))
+    hw = draw(st.sampled_from([8, 16, 32]))
+    ch = draw(st.sampled_from([4, 8, 16]))
+    g = LayerGraph("rand")
+    prev = g.add(Layer(name="input", kind="input", m=ch, p=hw, q=hw))
+    anchors = [prev]
+    c, h, w = ch, hw, hw
+    for i in range(n):
+        k = draw(st.sampled_from([1, 3]))
+        m = draw(st.sampled_from([4, 8, 16]))
+        prev = g.add(Layer(name=f"c{i}", kind="conv", c=c, h=h, w=w, m=m,
+                           p=h, q=w, r=k, s=k, padding=(k // 2, k // 2)),
+                     [prev])
+        c = m
+        if draw(st.booleans()) and len(anchors) > 1:
+            a = anchors[-1]
+            if g.layers[a].m == m and g.layers[a].p == h:
+                prev = g.add(Layer(name=f"add{i}", kind="add", c=m, h=h,
+                                   w=w, m=m, p=h, q=w), [a, prev])
+        anchors.append(prev)
+    return g
+
+
+@st.composite
+def graph_and_state(draw):
+    g = draw(random_conv_graphs())
+    edges = g.edges
+    fused = frozenset(e for e in edges if draw(st.booleans()))
+    return g, FusionState(g, fused)
+
+
+@given(graph_and_state())
+@settings(max_examples=40, deadline=None)
+def test_macs_conserved_and_costs_positive(gs):
+    g, state = gs
+    ev = Evaluator(g, SIMBA)
+    base = ev.layerwise()
+    cost = ev.evaluate(state)
+    if cost is None:              # invalid states are allowed to be skipped
+        assert not state.is_schedulable() or True
+        return
+    assert cost.macs == base.macs                # schedule-invariant work
+    assert cost.energy_pj > 0
+    assert cost.cycles > 0
+    # DRAM writes only ever shrink under fusion (outputs subset layerwise's)
+    assert cost.dram_write_words <= base.dram_write_words
+    assert cost.act_write_events <= base.act_write_events
+
+
+@given(graph_and_state())
+@settings(max_examples=30, deadline=None)
+def test_fitness_nonnegative_and_layerwise_unity(gs):
+    g, state = gs
+    ev = Evaluator(g, SIMBA)
+    assert ev.fitness(FusionState.layerwise(g)) == 1.0
+    assert ev.fitness(state) >= 0.0
+
+
+@pytest.mark.parametrize("seed", [0, 7, 42, 99])
+def test_crossover_children_are_valid_genomes(seed):
+    from tests.test_fusion import skip_graph
+    g = skip_graph()
+    ev = Evaluator(g, SIMBA)
+    res = run_ga(g, ev, GAConfig.fast(generations=8, seed=seed,
+                                      crossover_rate=0.5))
+    assert res.best_state.fused <= set(g.edges)
+    assert ev.evaluate(res.best_state) is not None
+
+
+def test_ga_deterministic_given_seed():
+    from repro.workloads import mobilenet_v3_large
+    g = mobilenet_v3_large()
+    ev1, ev2 = Evaluator(g, SIMBA), Evaluator(g, SIMBA)
+    r1 = run_ga(g, ev1, GAConfig.fast(generations=10, seed=42))
+    r2 = run_ga(g, ev2, GAConfig.fast(generations=10, seed=42))
+    assert r1.best_fitness == r2.best_fitness
+    assert r1.best_state.fused == r2.best_state.fused
+    assert r1.history == r2.history

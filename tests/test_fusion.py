@@ -1,0 +1,113 @@
+"""Fusion states: grouping, schedulability, DRAM residency, mutation."""
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.fusion import FusionState
+from repro.core.graph import Layer, LayerGraph
+
+
+def chain(n=4):
+    """input -> c0 -> c1 -> ... -> c{n-1}"""
+    g = LayerGraph("chain")
+    prev = g.add(Layer(name="input", kind="input", m=8, p=16, q=16))
+    for i in range(n):
+        prev = g.add(Layer(name=f"c{i}", kind="conv", c=8, h=16, w=16,
+                           m=8, p=16, q=16, r=3, s=3, padding=(1, 1)),
+                     [prev])
+    return g
+
+
+def skip_graph():
+    """input -> a -> b -> add(a_out, b_out) pattern (residual)."""
+    g = LayerGraph("skip")
+    i = g.add(Layer(name="input", kind="input", m=8, p=16, q=16))
+    a = g.add(Layer(name="a", kind="conv", c=8, h=16, w=16, m=8, p=16, q=16,
+                    r=3, s=3, padding=(1, 1)), [i])
+    b = g.add(Layer(name="b", kind="conv", c=8, h=16, w=16, m=8, p=16, q=16,
+                    r=3, s=3, padding=(1, 1)), [a])
+    g.add(Layer(name="add", kind="add", c=8, h=16, w=16, m=8, p=16, q=16),
+          [a, b])
+    return g
+
+
+def test_layerwise_all_singletons():
+    g = chain(4)
+    s = FusionState.layerwise(g)
+    assert len(s.groups()) == len(g.names)
+    assert s.is_schedulable()
+
+
+def test_fully_fused_single_group():
+    g = chain(4)
+    s = FusionState.fully_fused(g)
+    assert len(s.groups()) == 1
+    assert s.is_schedulable()
+
+
+def test_combine_separate_roundtrip():
+    g = chain(4)
+    s = FusionState.layerwise(g)
+    e = ("c0", "c1")
+    s2 = s.combine(e)
+    assert s2.group_of("c0") == s2.group_of("c1")
+    s3 = s2.separate(e)
+    assert s3.fused == s.fused
+
+
+def test_unschedulable_skip_fusion_detected():
+    # fusing a->add (the skip) while splitting a->b and b->add makes
+    # group{a,add} <-> group{b} cyclic in the condensation
+    g = skip_graph()
+    s = FusionState(g, frozenset({("a", "add")}))
+    assert not s.is_schedulable()
+    # fusing the whole residual block is fine
+    s2 = FusionState(g, frozenset({("a", "b"), ("b", "add"), ("a", "add")}))
+    assert s2.is_schedulable()
+    assert len(s2.groups()) == 2  # {input}, {a,b,add}
+
+
+def test_tensor_offchip_partial_consumers():
+    g = skip_graph()
+    # fuse a->b only: a's output still consumed by add (other group) => offchip
+    s = FusionState(g, frozenset({("a", "b")}))
+    assert s.tensor_offchip("a")
+    assert s.tensor_offchip("b")   # b -> add crosses groups
+    s2 = FusionState(g, frozenset({("a", "b"), ("b", "add"), ("a", "add")}))
+    assert not s2.tensor_offchip("a")
+    assert not s2.tensor_offchip("b")
+    assert s2.tensor_offchip("add")  # model output
+
+
+def test_group_schedule_respects_dependencies():
+    g = skip_graph()
+    s = FusionState(g, frozenset({("a", "b")}))
+    sched = s.group_schedule(random.Random(0))
+    flat = [n for grp in sched for n in grp]
+    pos = {n: i for i, n in enumerate(flat)}
+    for u, v in g.edges:
+        assert pos[u] < pos[v]
+
+
+@given(st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=50, deadline=None)
+def test_mutation_preserves_genome_validity(seed):
+    g = skip_graph()
+    rng = random.Random(seed)
+    s = FusionState.layerwise(g)
+    for _ in range(12):
+        s = s.mutate(rng)
+        assert s.fused <= set(g.edges)
+        # groups partition the node set
+        nodes = [n for grp in s.groups() for n in grp]
+        assert sorted(nodes) == sorted(g.names)
+
+
+def test_mutate_is_single_edge_flip():
+    g = chain(5)
+    rng = random.Random(3)
+    s = FusionState.layerwise(g)
+    s2 = s.mutate(rng)
+    assert len(s2.fused ^ s.fused) == 1

@@ -1,0 +1,73 @@
+"""GA engine: finds brute-force optimum on small graphs, improves real
+workloads, never returns invalid states."""
+import itertools
+import random
+
+import pytest
+
+from repro.core.fusion import FusionState
+from repro.core.ga import GAConfig, run_ga
+from repro.core.graph import Layer, LayerGraph
+from repro.core.schedule import optimize
+from repro.costmodel import SIMBA, Evaluator
+from repro.workloads import mobilenet_v3_large
+from tests.test_fusion import chain, skip_graph
+
+
+def brute_force_best(g, ev, objective="edp"):
+    best = None
+    edges = g.edges
+    for bits in itertools.product([0, 1], repeat=len(edges)):
+        fused = frozenset(e for e, b in zip(edges, bits) if b)
+        s = FusionState(g, fused)
+        f = ev.fitness(s, objective)
+        if best is None or f > best[0]:
+            best = (f, s)
+    return best
+
+
+def test_ga_matches_brute_force_on_chain():
+    g = chain(5)        # 5 edges -> 32 states
+    ev = Evaluator(g, SIMBA)
+    bf_f, _ = brute_force_best(g, ev)
+    res = run_ga(g, ev, GAConfig.fast(generations=30, seed=0))
+    assert res.best_fitness == pytest.approx(bf_f, rel=1e-9)
+
+
+def test_ga_matches_brute_force_on_skip_graph():
+    g = skip_graph()    # includes unschedulable corners
+    ev = Evaluator(g, SIMBA)
+    bf_f, _ = brute_force_best(g, ev)
+    res = run_ga(g, ev, GAConfig.fast(generations=30, seed=1))
+    assert res.best_fitness == pytest.approx(bf_f, rel=1e-9)
+
+
+def test_ga_monotone_history():
+    g = chain(6)
+    ev = Evaluator(g, SIMBA)
+    res = run_ga(g, ev, GAConfig.fast(generations=20, seed=2))
+    assert all(b >= a - 1e-12 for a, b in zip(res.history, res.history[1:]))
+
+
+def test_ga_improves_mobilenet_on_simba():
+    res = optimize(mobilenet_v3_large(), SIMBA,
+                   GAConfig.fast(generations=25, seed=0))
+    assert res.edp_improvement > 1.2
+    assert res.energy_improvement > 1.2
+    assert res.best.act_write_events < res.baseline.act_write_events
+    # returned best state is valid & schedulable
+    assert res.best_state.is_schedulable()
+
+
+def test_ga_never_selects_invalid_best():
+    g = skip_graph()
+    ev = Evaluator(g, SIMBA)
+    res = run_ga(g, ev, GAConfig.fast(generations=10, seed=3))
+    assert ev.evaluate(res.best_state) is not None
+
+
+def test_fitness_of_layerwise_never_below_one_at_best():
+    g = chain(4)
+    ev = Evaluator(g, SIMBA)
+    res = run_ga(g, ev, GAConfig.fast(generations=10, seed=4))
+    assert res.best_fitness >= 1.0   # layerwise is in the initial population

@@ -1,0 +1,81 @@
+"""Layer-graph IR: geometry, tensor sizes, MAC counts, validation."""
+import pytest
+
+from repro.core.graph import Layer, LayerGraph
+from repro.workloads import mobilenet_v3_large, resnet50, unet, vgg16
+
+
+def test_conv_sizes():
+    l = Layer(name="c", kind="conv", c=64, h=56, w=56, m=128, p=56, q=56,
+              r=3, s=3, stride=(1, 1), padding=(1, 1))
+    assert l.input_size == 64 * 56 * 56
+    assert l.output_size == 128 * 56 * 56
+    assert l.weight_size == 128 * 64 * 9
+    assert l.macs == 128 * 56 * 56 * 64 * 9
+
+
+def test_depthwise_sizes():
+    l = Layer(name="d", kind="dwconv", c=32, h=28, w=28, m=32, p=28, q=28,
+              r=3, s=3, groups=32)
+    assert l.weight_size == 32 * 9
+    assert l.macs == 32 * 28 * 28 * 9
+
+
+def test_fc_sizes():
+    l = Layer(name="f", kind="fc", c=2048, h=1, w=1, m=1000, p=1, q=1)
+    assert l.weight_size == 2048 * 1000
+    assert l.macs == 2048 * 1000
+
+
+def test_unknown_kind_rejected():
+    with pytest.raises(ValueError):
+        Layer(name="x", kind="wat")
+
+
+def test_duplicate_layer_rejected():
+    g = LayerGraph("t")
+    g.add(Layer(name="input", kind="input", m=3, p=8, q=8))
+    with pytest.raises(ValueError):
+        g.add(Layer(name="input", kind="input", m=3, p=8, q=8))
+
+
+def test_unknown_producer_rejected():
+    g = LayerGraph("t")
+    with pytest.raises(ValueError):
+        g.add(Layer(name="c", kind="conv", c=3, h=8, w=8, m=4, p=8, q=8,
+                    r=3, s=3), ["nope"])
+
+
+# ---- published MAC counts (batch 1) -----------------------------------------------
+
+def test_resnet50_macs():
+    g = resnet50()
+    # ~4.1 GMACs (He et al. report 3.8 GFLOPs ~ 3.8-4.1 GMACs w/ fc+shortcuts)
+    assert 3.8e9 < g.total_macs < 4.4e9
+    assert 23e6 < g.total_weights < 27e6      # ~25.5 M params
+
+
+def test_mobilenet_v3_macs():
+    g = mobilenet_v3_large()
+    # paper reports 219 MMAdds for MobileNetV3-Large @224
+    assert 200e6 < g.total_macs < 240e6
+    assert 4e6 < g.total_weights < 6.5e6
+
+
+def test_vgg16_macs():
+    g = vgg16()
+    assert 15.2e9 < g.total_macs < 15.8e9     # 15.5 GMACs
+    assert 130e6 < g.total_weights < 140e6
+
+
+def test_unet_builds_and_validates():
+    g = unet()
+    assert g.total_macs > 1e9
+    # decoder restores full resolution
+    last_conv = [l for l in g.layers.values() if l.kind == "conv"][-1]
+    assert last_conv.p == 256 and last_conv.q == 256
+
+
+def test_edge_shapes_agree_everywhere():
+    for build in (resnet50, mobilenet_v3_large, unet, vgg16):
+        build().validate()

@@ -1,0 +1,147 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret=True vs pure-jnp
+oracle (ref.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (flash_attention, fused_rmsnorm, mamba_scan,
+                           rglru_scan)
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _tol(dtype):
+    return TOL[jnp.bfloat16] if dtype == jnp.bfloat16 else TOL[jnp.float32]
+
+
+# ---- flash attention ------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D", [
+    (1, 64, 4, 4, 32),      # MHA
+    (2, 80, 4, 2, 32),      # GQA, non-multiple S
+    (1, 33, 8, 1, 16),      # MQA, ragged S
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(B, S, Hq, Hkv, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    out = flash_attention(q, k, v, block_q=32, block_kv=32, interpret=True)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("mode", [dict(window=16), dict(chunk=32),
+                                  dict(causal=False)])
+def test_flash_attention_masks(mode):
+    B, S, Hq, Hkv, D = 2, 96, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    kwargs = dict(causal=True)
+    kwargs.update(mode)
+    out = flash_attention(q, k, v, block_q=32, block_kv=32, interpret=True,
+                          **kwargs)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), **kwargs
+                        ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_flash_attention_decode_offset():
+    B, Skv, Hq, Hkv, D = 2, 64, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, 1, Hq, D))
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, D))
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, D))
+    out = flash_attention(q, k, v, q_offset=Skv - 1, block_q=8, block_kv=32,
+                          interpret=True)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), q_offset=Skv - 1
+                        ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+# ---- mamba scan ------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,Di,N", [(1, 32, 16, 4), (2, 40, 24, 8),
+                                      (1, 7, 130, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mamba_scan(B, S, Di, N, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    da = jax.random.uniform(ks[0], (B, S, Di, N), dtype, 0.5, 0.99)
+    dbx = (jax.random.normal(ks[1], (B, S, Di, N)) * 0.1).astype(dtype)
+    c = jax.random.normal(ks[2], (B, S, N), dtype)
+    y = mamba_scan(da, dbx, c, block_d=8, time_chunk=16, interpret=True)
+    yr = mamba_scan_ref(da, dbx, c)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+# ---- rg-lru scan -------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,W", [(1, 32, 16), (2, 50, 20), (1, 9, 129)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_scan(B, S, W, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(4), 2)
+    a = jax.random.uniform(ks[0], (B, S, W), dtype, 0.5, 0.99)
+    b = jax.random.normal(ks[1], (B, S, W), dtype)
+    h = rglru_scan(a, b, block_w=8, time_chunk=16, interpret=True)
+    hr = rglru_scan_ref(a, b)
+    np.testing.assert_allclose(np.asarray(h, np.float32),
+                               np.asarray(hr, np.float32),
+                               atol=_tol(dtype) * 5, rtol=_tol(dtype) * 5)
+
+
+# ---- fused rmsnorm ------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,D", [(16, 64), (37, 128), (5, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("with_residual", [False, True])
+def test_fused_rmsnorm(N, D, dtype, with_residual):
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    x = jax.random.normal(ks[0], (N, D), dtype)
+    w = (jax.random.normal(ks[1], (D,)) * 0.1 + 1.0).astype(dtype)
+    if with_residual:
+        r = jax.random.normal(ks[2], (N, D), dtype)
+        y, res = fused_rmsnorm(x, w, r, block_rows=16, interpret=True)
+        yr, resr = rmsnorm_ref(x, w, r)
+        np.testing.assert_allclose(np.asarray(res, np.float32),
+                                   np.asarray(resr, np.float32),
+                                   atol=_tol(dtype), rtol=_tol(dtype))
+    else:
+        y = fused_rmsnorm(x, w, block_rows=16, interpret=True)
+        yr = rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_kernels_match_model_attention():
+    """The Pallas kernel agrees with the model's XLA attention paths."""
+    from repro.models.attention import attention
+    B, S, Hq, Hkv, D = 2, 64, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    pos = jnp.arange(S)
+    xla = attention(q, k, v, pos, pos, causal=True, impl="blockwise",
+                    block_kv=32)
+    pallas = flash_attention(q, k, v, block_q=32, block_kv=32,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(xla), np.asarray(pallas),
+                               atol=2e-5, rtol=2e-5)

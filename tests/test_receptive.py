@@ -1,0 +1,95 @@
+"""Receptive-field backtrace: textbook values + footprint monotonicity."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.graph import Layer, LayerGraph
+from repro.core.receptive import (backtrace_rows, group_footprint_words,
+                                  max_tile_rows, receptive_field_hw,
+                                  required_input_rows)
+
+
+def conv_chain(ks, strides=None, hw=32, ch=4):
+    strides = strides or [1] * len(ks)
+    g = LayerGraph("rf")
+    prev = g.add(Layer(name="input", kind="input", m=ch, p=hw, q=hw))
+    h = w = hw
+    names = []
+    for i, (k, s) in enumerate(zip(ks, strides)):
+        p = (h + 2 * (k // 2) - k) // s + 1
+        q = (w + 2 * (k // 2) - k) // s + 1
+        prev = g.add(Layer(name=f"c{i}", kind="conv", c=ch, h=h, w=w, m=ch,
+                           p=p, q=q, r=k, s=k, stride=(s, s),
+                           padding=(k // 2, k // 2)), [prev])
+        names.append(prev)
+        h, w = p, q
+    return g, names
+
+
+def test_required_rows_3x3():
+    l = Layer(name="c", kind="conv", c=1, h=32, w=32, m=1, p=32, q=32,
+              r=3, s=3, padding=(1, 1))
+    assert required_input_rows(l, 1) == 3
+    assert required_input_rows(l, 4) == 6            # (4-1)*1 + 3
+
+
+def test_required_rows_stride2():
+    l = Layer(name="c", kind="conv", c=1, h=32, w=32, m=1, p=16, q=16,
+              r=3, s=3, stride=(2, 2), padding=(1, 1))
+    assert required_input_rows(l, 1) == 3
+    assert required_input_rows(l, 2) == 5            # (2-1)*2 + 3
+
+
+def test_two_3x3_convs_give_5x5_rf():
+    # classic result: stacking two 3x3 convs -> 5x5 receptive field (Fig. 5)
+    g, names = conv_chain([3, 3])
+    rf = receptive_field_hw(g, names)
+    assert rf == (5, 5)
+
+
+def test_three_3x3_convs_give_7x7_rf():
+    g, names = conv_chain([3, 3, 3])
+    assert receptive_field_hw(g, names) == (7, 7)
+
+
+def test_pointwise_does_not_grow_rf():
+    # paper Fig. 3: pointwise receptive field grows differently from 3x3
+    g, names = conv_chain([1, 3, 1])
+    assert receptive_field_hw(g, names) == (3, 3)
+
+
+def test_stride_doubles_downstream_growth():
+    g, names = conv_chain([3, 3], strides=[2, 1])
+    # one output px needs 3 rows of mid; mid 3 rows need (3-1)*2+3 = 7 input
+    assert receptive_field_hw(g, names) == (7, 7)
+
+
+def test_backtrace_rows_clamped_to_height():
+    g, names = conv_chain([3, 3], hw=4)
+    rows = backtrace_rows(g, names, 100)
+    for n in names:
+        assert rows[n] <= g.layers[n].p
+
+
+@given(st.integers(min_value=1, max_value=16))
+@settings(max_examples=20, deadline=None)
+def test_footprint_monotonic_in_tile(t):
+    g, names = conv_chain([3, 3, 3], hw=32)
+    f1 = group_footprint_words(g, names, t)
+    f2 = group_footprint_words(g, names, t + 1)
+    assert f2 >= f1 > 0
+
+
+def test_max_tile_rows_maximal_and_feasible():
+    g, names = conv_chain([3, 3], hw=32, ch=8)
+    cap = group_footprint_words(g, names, 5)
+    t = max_tile_rows(g, names, cap)
+    assert t >= 5
+    assert group_footprint_words(g, names, t) <= cap
+    if t < 32:
+        assert group_footprint_words(g, names, t + 1) > cap
+
+
+def test_max_tile_rows_zero_when_too_small():
+    g, names = conv_chain([3, 3], hw=32, ch=64)
+    assert max_tile_rows(g, names, 10) == 0

@@ -1,0 +1,38 @@
+"""Schedule report + TPU-GA sharding-mode genome."""
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.core import GAConfig, optimize
+from repro.core.report import schedule_report
+from repro.core.tpu_ga import optimize_tpu_schedule
+from repro.costmodel import SIMBA
+from repro.workloads import mobilenet_v3_large
+
+
+def test_schedule_report_renders_all_groups():
+    res = optimize(mobilenet_v3_large(), SIMBA,
+                   GAConfig.fast(generations=10, seed=0))
+    text = schedule_report(res, SIMBA)
+    assert "edp x" in text
+    # one row per group (+3 header lines)
+    assert len(text.splitlines()) == res.best.n_groups + 3
+    assert f"groups={res.best.n_groups}" in text
+
+
+def test_schedule_report_max_rows():
+    res = optimize(mobilenet_v3_large(), SIMBA,
+                   GAConfig.fast(generations=5, seed=1))
+    text = schedule_report(res, SIMBA, max_rows=4)
+    assert "more groups" in text
+
+
+def test_tpu_ga_selects_fsdp_for_dense_tp_for_moe():
+    """The GA's extended genome reproduces the manual §Perf-5 hillclimb:
+    FSDP for dense models, TP/EP retained for MoE."""
+    dense = optimize_tpu_schedule(get_config("stablelm-1.6b"),
+                                  SHAPES["train_4k"],
+                                  ga=GAConfig.fast(generations=20, seed=0))
+    assert dense.best.sharding == "fsdp"
+    moe = optimize_tpu_schedule(get_config("dbrx-132b"), SHAPES["train_4k"],
+                                ga=GAConfig.fast(generations=20, seed=0))
+    assert moe.best.sharding == "tp"
+    assert moe.best_cost.hbm_resident_bytes <= 16e9
