@@ -1,15 +1,47 @@
-"""Shared benchmark helpers: timing + CSV row emission."""
+"""Shared benchmark helpers: timing, CSV row emission, and machine-readable
+JSON records (``benchmarks/run.py --json``)."""
 from __future__ import annotations
 
+import json
+import os
+import platform
+import sys
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Tuple
 
 ROWS: List[Tuple[str, float, str]] = []
+RECORDS: List[Dict] = []        # structured metrics for the JSON report
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def record(name: str, **fields):
+    """Emit a structured metric record (kept alongside the CSV rows so perf
+    trajectories can be diffed against ``BENCH_*.json`` baselines)."""
+    RECORDS.append({"name": name, **fields})
+
+
+def dump_json(path: str) -> None:
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    payload = {
+        "meta": {
+            "python": sys.version.split()[0],
+            "platform": platform.platform(),
+            "unix_time": int(time.time()),
+        },
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in ROWS],
+        "records": RECORDS,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {len(ROWS)} rows / {len(RECORDS)} records to {path}")
 
 
 def time_call(fn: Callable, *args, repeats: int = 3, **kw) -> Tuple[float, object]:

@@ -39,9 +39,9 @@ def run(full: bool = False):
             cost = ev._group_cost(frozenset(group))
             if cost is None:
                 continue
-            lc, cyc = cost
+            energy_pj, cyc = cost[0], cost[1]
             tgt_early = all(m in early for m in group)
-            edp = lc.energy_pj * max(cyc, 1)
+            edp = energy_pj * max(cyc, 1)
             if accum == "base":
                 if tgt_early:
                     e_base_early += edp

@@ -127,6 +127,7 @@ def run(full: bool = False):
             "memory_s_analytic", "collective_s", "dominant", "model_flops",
             "hlo_flops_global", "useful_ratio", "step_bound_s",
             "roofline_fraction", "next_action", "reason"]
+    os.makedirs(os.path.dirname(OUT_CSV), exist_ok=True)
     with open(OUT_CSV, "w") as f:
         f.write(",".join(keys) + "\n")
         for r in rows:

@@ -3,7 +3,10 @@
 Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` restores the
 paper's GA settings (P=100, N=10, G=500); the default uses fewer
 generations for CPU wall-time (EXPERIMENTS.md records which setting
-produced each number).
+produced each number).  ``--json PATH`` additionally writes all rows plus
+the structured metric records (GA throughput, cache hit rates, ...) as a
+machine-readable report; save one as ``BENCH_<label>.json`` to serve as the
+perf-regression baseline (see benchmarks/README.md).
 """
 import argparse
 import sys
@@ -16,6 +19,8 @@ def main() -> None:
                     help="paper GA settings (slower)")
     ap.add_argument("--only", default="",
                     help="comma-separated benchmark names to run")
+    ap.add_argument("--json", default="",
+                    help="write rows + structured records to this path")
     args = ap.parse_args()
 
     from benchmarks import (fig7_receptive_field, fig9_resnet50_groups,
@@ -42,6 +47,9 @@ def main() -> None:
         except Exception:
             failures += 1
             print(f"{name}_FAILED,0,{traceback.format_exc(limit=1)!r}")
+    if args.json:
+        from benchmarks.common import dump_json
+        dump_json(args.json)
     sys.exit(1 if failures else 0)
 
 

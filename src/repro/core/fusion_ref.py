@@ -1,0 +1,147 @@
+"""Reference fusion-state implementation (pre-incremental engine).
+
+This is the original dict/frozenset implementation of the GA genome, kept
+verbatim as the *oracle* for the incremental bitmask engine in
+``repro.core.fusion``: property tests assert that the two agree bit-for-bit on
+``groups()``, ``is_schedulable()`` and evaluated :class:`ScheduleCost` for
+randomly sampled states.  It is intentionally slow (it rebuilds union-find and
+the condensation on every query) and must not be used on the GA hot path.
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
+
+from repro.core.graph import LayerGraph
+from repro.core.toposort import CycleError, topological_sort_edges
+
+Edge = Tuple[str, str]
+
+
+class ReferenceFusionState:
+    """Immutable fusion genome over ``graph`` (reference semantics)."""
+
+    __slots__ = ("graph", "fused", "_groups", "_group_of")
+
+    def __init__(self, graph: LayerGraph, fused: FrozenSet[Edge] = frozenset()):
+        all_edges = set(graph.edges)
+        bad = set(fused) - all_edges
+        if bad:
+            raise ValueError(f"fused edges not in graph: {sorted(bad)!r}")
+        self.graph = graph
+        self.fused = frozenset(fused)
+        self._groups: Optional[List[FrozenSet[str]]] = None
+        self._group_of: Optional[Dict[str, int]] = None
+
+    # ---- construction helpers -------------------------------------------------
+    @classmethod
+    def layerwise(cls, graph: LayerGraph) -> "ReferenceFusionState":
+        return cls(graph, frozenset())
+
+    @classmethod
+    def fully_fused(cls, graph: LayerGraph) -> "ReferenceFusionState":
+        return cls(graph, frozenset(graph.edges))
+
+    # ---- genome actions ---------------------------------------------------------
+    def combine(self, edge: Edge) -> "ReferenceFusionState":
+        if edge not in set(self.graph.edges):
+            raise ValueError(f"no such edge {edge!r}")
+        return ReferenceFusionState(self.graph, self.fused | {edge})
+
+    def separate(self, edge: Edge) -> "ReferenceFusionState":
+        return ReferenceFusionState(self.graph, self.fused - {edge})
+
+    def mutate(self, rng: random.Random) -> "ReferenceFusionState":
+        edges = self.graph.edges
+        edge = edges[rng.randrange(len(edges))]
+        return self.separate(edge) if edge in self.fused else self.combine(edge)
+
+    # ---- derived structure ------------------------------------------------------
+    def groups(self) -> List[FrozenSet[str]]:
+        """Weakly-connected components over fused edges, in first-seen order."""
+        if self._groups is not None:
+            return self._groups
+        parent: Dict[str, str] = {n: n for n in self.graph.names}
+
+        def find(x: str) -> str:
+            while parent[x] != x:
+                parent[x] = parent[parent[x]]
+                x = parent[x]
+            return x
+
+        for u, v in self.fused:
+            ru, rv = find(u), find(v)
+            if ru != rv:
+                parent[ru] = rv
+        comp: Dict[str, List[str]] = {}
+        for n in self.graph.names:
+            comp.setdefault(find(n), []).append(n)
+        self._groups = [frozenset(ms) for ms in comp.values()]
+        self._group_of = {}
+        for gi, g in enumerate(self._groups):
+            for n in g:
+                self._group_of[n] = gi
+        return self._groups
+
+    def group_of(self, name: str) -> int:
+        self.groups()
+        assert self._group_of is not None
+        return self._group_of[name]
+
+    def group_edges(self) -> List[Tuple[int, int]]:
+        self.groups()
+        out: Set[Tuple[int, int]] = set()
+        for u, v in self.graph.edges:
+            gu, gv = self.group_of(u), self.group_of(v)
+            if gu != gv:
+                out.add((gu, gv))
+        return sorted(out)
+
+    def is_schedulable(self) -> bool:
+        gs = self.groups()
+        try:
+            topological_sort_edges(range(len(gs)), self.group_edges())
+            return True
+        except CycleError:
+            return False
+
+    def group_schedule(self, rng: Optional[random.Random] = None
+                       ) -> List[List[str]]:
+        gs = self.groups()
+        group_order = topological_sort_edges(range(len(gs)), self.group_edges(), rng)
+        sched: List[List[str]] = []
+        for gi in group_order:
+            members = gs[gi]
+            inner = topological_sort_edges(
+                [n for n in self.graph.names if n in members],
+                self.graph.edges, rng)
+            sched.append(inner)
+        return sched
+
+    # ---- DRAM residency ----------------------------------------------------------
+    def tensor_offchip(self, producer: str) -> bool:
+        succ = self.graph.succs(producer)
+        if not succ:
+            return True
+        g = self.group_of(producer)
+        return any(self.group_of(v) != g for v in succ)
+
+    def offchip_tensors(self) -> List[str]:
+        return [n for n in self.graph.names
+                if self.graph.layers[n].output_size and self.tensor_offchip(n)]
+
+    # ---- identity -------------------------------------------------------------------
+    def key(self) -> FrozenSet[Edge]:
+        return self.fused
+
+    def __eq__(self, other):
+        return isinstance(other, ReferenceFusionState) \
+            and self.fused == other.fused and self.graph is other.graph
+
+    def __hash__(self):
+        return hash((id(self.graph), self.fused))
+
+    def __repr__(self):
+        return (f"ReferenceFusionState({self.graph.name}, {len(self.fused)}/"
+                f"{len(self.graph.edges)} edges fused, "
+                f"{len(self.groups())} groups)")

@@ -10,19 +10,24 @@ Faithful to the paper's configuration:
 * fitness ``F = Eval_layerwise / Eval_new`` on the chosen objective (EDP by
   default, "as it provided the most useful information");
 * survivors are the Top-``N = 10`` by fitness **plus a few random** pool
-  members "to ensure we do not quickly converge to a poor local minimum";
+  members "to ensure we do not quickly converge to a poor local minimum",
+  and the pool is **topped back up to P** with fresh mutants of survivors
+  (earlier revisions silently capped the live pool at N + random_survivors,
+  making ``population`` dead configuration);
 * ``G = 500`` generations.
 
 Evaluation is delegated to a memoizing :class:`repro.costmodel.evaluator.
 Evaluator` (or any object with the same ``fitness``/``evaluate`` protocol,
 e.g. the TPU roofline evaluator in ``repro.core.tpu_ga``), so the engine is
-cost-model agnostic.
+cost-model agnostic.  Whole generations are scored through
+``evaluator.fitness_batch`` when available, which dedupes offspring against
+the evaluator's group-cost cache before costing only novel groups.
 """
 from __future__ import annotations
 
 import random
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Hashable, List, Sequence, Tuple
 
 from repro.core.fusion import FusionState
 from repro.core.graph import LayerGraph
@@ -57,11 +62,37 @@ class GAResult:
     best_state: FusionState
     best_fitness: float
     history: List[float] = field(default_factory=list)   # best fitness per gen
-    evaluations: int = 0
+    evaluations: int = 0              # unique genomes scored
+    offspring_evaluated: int = 0      # offspring submitted for scoring
 
     @property
     def generations_run(self) -> int:
         return len(self.history)
+
+
+def select_pool(entries: Sequence[Tuple[float, object]], top_n: int,
+                random_survivors: int, rng: random.Random,
+                key: Callable[[object], Hashable] = lambda s: s
+                ) -> List[Tuple[float, object]]:
+    """Paper Alg. 1 survivor selection, shared by the fusion and TPU GAs.
+
+    Dedupes ``entries`` by genome ``key`` (keeping the best-ranked copy),
+    returns the Top-``top_n`` plus ``random_survivors`` shuffled others.
+    Zero-fitness (invalid) genomes are excluded from the random-survivor
+    draw: they can never win and only breed more invalid offspring.
+    """
+    seen = set()
+    unique: List[Tuple[float, object]] = []
+    for f, s in sorted(entries, key=lambda fs: -fs[0]):
+        k = key(s)
+        if k in seen:
+            continue
+        seen.add(k)
+        unique.append((f, s))
+    top = unique[:top_n]
+    rest = [fs for fs in unique[top_n:] if fs[0] > 0.0]
+    rng.shuffle(rest)
+    return top + rest[:random_survivors]
 
 
 def run_ga(graph: LayerGraph, evaluator, config: GAConfig = GAConfig()
@@ -69,60 +100,76 @@ def run_ga(graph: LayerGraph, evaluator, config: GAConfig = GAConfig()
     """Run Alg. 1.  ``evaluator.fitness(state, objective) -> float`` with 0
     meaning invalid."""
     rng = random.Random(config.seed)
-    fit_cache: Dict[frozenset, float] = {}
+    cg = graph.compiled()
+    fit_cache: Dict[int, float] = {}
+    batch = getattr(evaluator, "fitness_batch", None)
+    offspring_evaluated = 0
 
-    def fitness(state: FusionState) -> float:
-        key = state.key()
-        if key not in fit_cache:
-            fit_cache[key] = evaluator.fitness(state, config.objective)
-        return fit_cache[key]
-
-    init = FusionState.layerwise(graph)
-    pool: List[Tuple[float, FusionState]] = [(fitness(init), init)]
-    history: List[float] = []
+    def score(states: List[FusionState]) -> List[float]:
+        """Fitness per state, via the run-level genome cache; novel genomes
+        are scored in one batch so the evaluator can dedupe group costs."""
+        fresh: Dict[int, FusionState] = {}
+        for s in states:
+            k = s.key()
+            if k not in fit_cache and k not in fresh:
+                fresh[k] = s
+        if fresh:
+            todo = list(fresh.values())
+            if batch is not None:
+                fits = batch(todo, config.objective)
+            else:
+                fits = [evaluator.fitness(s, config.objective) for s in todo]
+            for s, f in zip(todo, fits):
+                fit_cache[s.key()] = f
+        return [fit_cache[s.key()] for s in states]
 
     def crossover(a: FusionState, b: FusionState) -> FusionState:
         """Uniform crossover on the fused-edge genome (beyond-paper)."""
-        fused = set()
-        for e in graph.edges:
-            src = a.fused if rng.random() < 0.5 else b.fused
-            if e in src:
-                fused.add(e)
-        return FusionState(graph, frozenset(fused))
+        mask = 0
+        for i in range(cg.m):
+            src = a.mask if rng.random() < 0.5 else b.mask
+            mask |= src & (1 << i)
+        return FusionState.from_mask(graph, mask)
+
+    init = FusionState.layerwise(graph)
+    pool: List[Tuple[float, FusionState]] = list(zip(score([init]), [init]))
+    history: List[float] = []
 
     for _gen in range(config.generations):
-        parents = [s for _, s in pool]
-        offspring: List[Tuple[float, FusionState]] = []
+        offspring: List[FusionState] = []
         for _ in range(config.mutations_per_gen):
-            parent = parents[rng.randrange(len(parents))]
+            parent = pool[rng.randrange(len(pool))][1]
             if config.crossover_rate and rng.random() < config.crossover_rate \
-                    and len(parents) > 1:
-                other = parents[rng.randrange(len(parents))]
+                    and len(pool) > 1:
+                other = pool[rng.randrange(len(pool))][1]
                 parent = crossover(parent, other)
-            child = parent.mutate(rng)
-            offspring.append((fitness(child), child))
+            offspring.append(parent.mutate(rng))
+        fits = score(offspring)
+        offspring_evaluated += len(offspring)
 
-        merged = pool + offspring
-        # dedupe by genome, keep best fitness ordering stable
-        seen = set()
-        unique: List[Tuple[float, FusionState]] = []
-        for f, s in sorted(merged, key=lambda fs: -fs[0]):
-            if s.key() in seen:
-                continue
-            seen.add(s.key())
-            unique.append((f, s))
-
-        top = unique[:config.top_n]
-        rest = unique[config.top_n:]
-        rng.shuffle(rest)
-        pool = top + rest[:config.random_survivors]
-        # keep population topped up with fresh mutants of the best
-        while len(pool) < min(config.population,
-                              config.top_n + config.random_survivors):
-            child = pool[0][1].mutate(rng)
-            pool.append((fitness(child), child))
-        history.append(pool[0][0])
+        pool = select_pool(pool + list(zip(fits, offspring)),
+                           config.top_n, config.random_survivors, rng,
+                           key=lambda s: s.key())
+        # keep the pool topped up to the paper's full P with fresh mutants of
+        # survivors (duplicates allowed; next generation dedupes); parents are
+        # picked by size-2 tournament over the rank-sorted survivor list, which
+        # balances intensification around the elite against survivor diversity
+        if len(pool) < config.population:
+            need = config.population - len(pool)
+            n_surv = len(pool)
+            topup = []
+            for _ in range(need):
+                i, j = rng.randrange(n_surv), rng.randrange(n_surv)
+                topup.append(pool[min(i, j)][1].mutate(rng))
+            tfits = score(topup)
+            offspring_evaluated += len(topup)
+            pool.extend(zip(tfits, topup))
+        history.append(max(f for f, _ in pool))
 
     best_f, best_s = max(pool, key=lambda fs: fs[0])
+    # batch scoring may re-associate float sums (~1 ulp); report the winner's
+    # exact single-state fitness so results are comparable across engines
+    best_f = evaluator.fitness(best_s, config.objective)
     return GAResult(best_state=best_s, best_fitness=best_f,
-                    history=history, evaluations=len(fit_cache))
+                    history=history, evaluations=len(fit_cache),
+                    offspring_evaluated=offspring_evaluated)

@@ -83,6 +83,51 @@ class Layer:
         return self.weight_size > 0
 
 
+class CompiledGraph:
+    """A :class:`LayerGraph` frozen into integer arrays for the GA hot path.
+
+    Node ids are positions in insertion order (a valid topological order by
+    construction); edge ids are positions in ``LayerGraph.edges`` order.  All
+    adjacency is precomputed so fusion-state operations never rebuild
+    ``graph.edges``/``preds``/``succs`` or hash strings.
+    """
+
+    __slots__ = ("graph", "n", "m", "names", "id_of", "layers", "edge_pairs",
+                 "edge_id", "eu", "ev", "succ_ids", "pred_ids", "inc",
+                 "out_size", "weight_size", "macs", "p")
+
+    def __init__(self, graph: "LayerGraph"):
+        self.graph = graph
+        names = tuple(graph.layers)
+        self.names = names
+        self.n = len(names)
+        self.id_of = {nm: i for i, nm in enumerate(names)}
+        self.layers = tuple(graph.layers[nm] for nm in names)
+        # dedupe parallel edges (e.g. an `add` consuming the same producer
+        # twice): the genome is a *set* of fused pairs, so duplicates must
+        # share one bit or one logical genome would have several masks
+        pairs = tuple(dict.fromkeys(
+            (u, v) for u, vs in graph._succ.items() for v in vs))
+        self.edge_pairs = pairs
+        self.m = len(pairs)
+        self.edge_id = {e: i for i, e in enumerate(pairs)}
+        self.eu = tuple(self.id_of[u] for u, _ in pairs)
+        self.ev = tuple(self.id_of[v] for _, v in pairs)
+        self.succ_ids = tuple(tuple(self.id_of[v] for v in graph._succ[nm])
+                              for nm in names)
+        self.pred_ids = tuple(tuple(self.id_of[v] for v in graph._pred[nm])
+                              for nm in names)
+        inc: List[List[Tuple[int, int]]] = [[] for _ in range(self.n)]
+        for i in range(self.m):
+            inc[self.eu[i]].append((i, self.ev[i]))
+            inc[self.ev[i]].append((i, self.eu[i]))
+        self.inc = tuple(tuple(xs) for xs in inc)
+        self.out_size = tuple(l.output_size for l in self.layers)
+        self.weight_size = tuple(l.weight_size for l in self.layers)
+        self.macs = tuple(l.macs for l in self.layers)
+        self.p = tuple(l.p for l in self.layers)
+
+
 class LayerGraph:
     """A DAG of layers.  Node order of ``layers`` is a valid topological order
     by construction (builders add producers before consumers)."""
@@ -92,6 +137,7 @@ class LayerGraph:
         self.layers: Dict[str, Layer] = {}
         self._succ: Dict[str, List[str]] = {}
         self._pred: Dict[str, List[str]] = {}
+        self._compiled: "CompiledGraph" = None
 
     # ---- construction ---------------------------------------------------------
     def add(self, layer: Layer, inputs: Sequence[str] = ()) -> str:
@@ -105,7 +151,14 @@ class LayerGraph:
         self._pred[layer.name] = list(inputs)
         for src in inputs:
             self._succ[src].append(layer.name)
+        self._compiled = None                        # adjacency changed
         return layer.name
+
+    def compiled(self) -> CompiledGraph:
+        """Frozen integer-array view; rebuilt lazily after any :meth:`add`."""
+        if self._compiled is None:
+            self._compiled = CompiledGraph(self)
+        return self._compiled
 
     # ---- queries ---------------------------------------------------------------
     def preds(self, name: str) -> List[str]:

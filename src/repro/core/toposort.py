@@ -51,6 +51,45 @@ def topological_sort_edges(
     return order
 
 
+def acyclic_indices(succ: Sequence[Sequence[int]]) -> bool:
+    """Kahn cycle check over integer nodes ``0..len(succ)-1``.
+
+    ``succ[u]`` lists successors of ``u``; parallel (duplicate) edges are
+    allowed — they inflate in-degrees symmetrically, so the check stays exact.
+    This is the allocation-light path used by the incremental fusion engine's
+    condensation test (no dicts, no string hashing).
+    """
+    n = len(succ)
+    indeg = [0] * n
+    for vs in succ:
+        for v in vs:
+            indeg[v] += 1
+    stack = [i for i in range(n) if indeg[i] == 0]
+    seen = 0
+    while stack:
+        u = stack.pop()
+        seen += 1
+        for v in succ[u]:
+            indeg[v] -= 1
+            if indeg[v] == 0:
+                stack.append(v)
+    return seen == n
+
+
+def member_order_ids(succ_ids: Sequence[Sequence[int]], ids: Sequence[int]
+                     ) -> List[int]:
+    """Deterministic Kahn order of the subgraph induced by ``ids`` (ascending
+    node ids), over precompiled integer adjacency.
+
+    Delegates to :func:`topological_sort_edges` with ``rng=None`` — the exact
+    ready-queue discipline and tie-breaks — so float accumulations done in
+    this order are bit-identical to the string-based reference path (the
+    callee filters the edge stream to the node set itself).
+    """
+    return topological_sort_edges(
+        ids, ((u, v) for u in ids for v in succ_ids[u]))
+
+
 def topological_sort(graph, rng: Optional[random.Random] = None) -> List[str]:
     """Topological order of a :class:`repro.core.graph.LayerGraph`."""
     return topological_sort_edges(graph.names, graph.edges, rng)

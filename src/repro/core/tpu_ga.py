@@ -19,7 +19,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.ga import GAConfig
+from repro.core.ga import GAConfig, select_pool
 from repro.costmodel.tpu_model import TpuCost, TpuSchedule, estimate
 from repro.roofline.analysis import HW
 
@@ -75,24 +75,23 @@ def optimize_tpu_schedule(cfg: ModelConfig, shape: ShapeConfig, *,
         c = cost_of(s)
         return 0.0 if c is None else metric(base_cost) / metric(c)
 
+    def mutant_of(parent: TpuSchedule) -> TpuSchedule:
+        opts = parent.mutate_options()
+        return opts[rng.randrange(len(opts))]
+
     pool: List[Tuple[float, TpuSchedule]] = [(fitness(baseline), baseline)]
     history: List[float] = []
     for _ in range(ga.generations):
-        parents = [s for _, s in pool]
-        children = []
-        for _ in range(ga.mutations_per_gen):
-            p = parents[rng.randrange(len(parents))]
-            opts = p.mutate_options()
-            children.append(opts[rng.randrange(len(opts))])
-        merged = {s: f for f, s in pool}
-        for c in children:
-            merged[c] = fitness(c)
-        ranked = sorted(merged.items(), key=lambda kv: -kv[1])
-        top = [(f, s) for s, f in ranked[:ga.top_n]]
-        rest = [(f, s) for s, f in ranked[ga.top_n:]]
-        rng.shuffle(rest)
-        pool = top + rest[:ga.random_survivors]
-        history.append(pool[0][0])
+        children = [mutant_of(pool[rng.randrange(len(pool))][1])
+                    for _ in range(ga.mutations_per_gen)]
+        entries = pool + [(fitness(c), c) for c in children]
+        pool = select_pool(entries, ga.top_n, ga.random_survivors, rng)
+        # honor the paper's full population: top the pool back up with fresh
+        # mutants of survivors (same fix as repro.core.ga.run_ga)
+        while len(pool) < ga.population:
+            c = mutant_of(pool[rng.randrange(len(pool))][1])
+            pool.append((fitness(c), c))
+        history.append(max(f for f, _ in pool))
 
     best_f, best = max(pool, key=lambda fs: fs[0])
     best_cost = cost_of(best)

@@ -15,20 +15,31 @@ Group costing (multi-member groups):
      from DRAM once per tile pass (paper §IV).
   3. member layers are costed with intra-group edges kept on-chip; compute
      and DRAM time overlap within the group.
+
+Hot-path notes (incremental engine): for bitmask genomes the group cache is
+keyed by the group's **member node-bitmask** (a Python int — one machine-word
+hash instead of a frozenset of strings), member topological order comes from
+integer adjacency, and :meth:`Evaluator.fitness_batch` dedupes an entire
+offspring generation against the cache before costing only novel groups.
+Reference states (``repro.core.fusion_ref``) take the original frozenset-keyed
+path; both paths run the same float operations in the same order, so costs
+agree bit-for-bit (pinned by ``tests/test_fusion_equivalence.py``).
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple, Union
 
-from repro.core.fusion import FusionState
+from repro.core.fusion import FusionState, iter_bits
 from repro.core.graph import LayerGraph
 from repro.core.receptive import max_tile_rows
-from repro.core.toposort import topological_sort_edges
+from repro.core.toposort import member_order_ids, topological_sort_edges
 from repro.costmodel.accelerator import Accelerator
 from repro.costmodel.energy import DEFAULT_ENERGY, EnergyModel
 from repro.costmodel.mapper import LayerCost, map_layer
+
+_MISSING = object()
 
 
 @dataclass(frozen=True)
@@ -40,10 +51,11 @@ class ScheduleCost:
     act_write_events: int
     macs: int
     n_groups: int
+    clock_hz: float = 200e6      # threaded from Accelerator.clock_mhz
 
     @property
     def seconds(self) -> float:
-        return self.cycles / 200e6          # evaluated clock is set per-arch
+        return self.cycles / self.clock_hz
 
     @property
     def edp(self) -> float:
@@ -60,6 +72,13 @@ class ScheduleCost:
                 }[objective]
 
 
+GroupKey = Union[int, FrozenSet[str]]
+
+# group cost record: (energy_pj, cycles, dram_read, dram_write,
+#                     act_write_events, macs) — or None if over-capacity
+GroupCost = Optional[Tuple[float, float, int, int, int, int]]
+
+
 class Evaluator:
     """Memoizing schedule evaluator for one (graph, accelerator) pair."""
 
@@ -68,8 +87,23 @@ class Evaluator:
         self.graph = graph
         self.acc = acc
         self.em = em
-        self._group_cache: Dict[FrozenSet[str], Optional[Tuple[LayerCost, float]]] = {}
+        self.cg = graph.compiled()
+        self.clock_hz = acc.clock_mhz * 1e6
+        self._group_cache: Dict[GroupKey, GroupCost] = {}
+        # multi-member group mask -> cost delta vs its members' singleton
+        # costs (the fast fitness path sums base + these corrections)
+        self._corr: Dict[int, GroupCost] = {}
+        # genome mask -> scalar cost sums (None = invalid/unschedulable);
+        # lets offspring apply only their mutation's group delta
+        self._sums: Dict[int, Optional[tuple]] = {}
+        # layerwise scalar sums + per-objective baseline metrics (lazy)
+        self._base: Optional[tuple] = None
         self.evals = 0
+        self.group_hits = 0          # group-cost lookups served from cache
+        self.group_misses = 0        # novel groups actually costed
+        self.sums_hits = 0           # states served via parent-delta sums
+        self.batch_states = 0        # states seen by fitness_batch
+        self.batch_unique = 0        # ... of which had a novel genome
         self._layerwise: Optional[ScheduleCost] = None
 
     # ---- public API ----------------------------------------------------------------
@@ -79,30 +113,18 @@ class Evaluator:
             assert self._layerwise is not None
         return self._layerwise
 
-    def evaluate(self, state: FusionState) -> Optional[ScheduleCost]:
+    def evaluate(self, state) -> Optional[ScheduleCost]:
         """Total cost, or None if the state is invalid (unschedulable or
-        over-capacity)."""
+        over-capacity).  Accepts bitmask states (fast path) and reference
+        states (frozenset path)."""
         self.evals += 1
         if not state.is_schedulable():
             return None
-        total = LayerCost()
-        cycles = 0.0
-        groups = state.groups()
-        for g in groups:
-            cached = self._group_cost(g)
-            if cached is None:
-                return None
-            gcost, gcycles = cached
-            total += gcost
-            cycles += gcycles
-        return ScheduleCost(
-            energy_pj=total.energy_pj, cycles=cycles,
-            dram_read_words=total.dram_read_words,
-            dram_write_words=total.dram_write_words,
-            act_write_events=total.act_write_events,
-            macs=total.macs, n_groups=len(groups))
+        if hasattr(state, "group_masks"):
+            return self._evaluate_keys(state.group_masks())
+        return self._evaluate_keys(state.groups())
 
-    def fitness(self, state: FusionState, objective: str = "edp") -> float:
+    def fitness(self, state, objective: str = "edp") -> float:
         """Paper Alg. 1 line 9: F = Eval_layerwise / Eval_new (0 if invalid)."""
         cost = self.evaluate(state)
         if cost is None:
@@ -110,17 +132,244 @@ class Evaluator:
         new = cost.metric(objective)
         return self.layerwise().metric(objective) / new if new > 0 else 0.0
 
-    # ---- internals ------------------------------------------------------------------
-    def _group_cost(self, members: FrozenSet[str]
-                    ) -> Optional[Tuple[LayerCost, float]]:
-        if members in self._group_cache:
-            return self._group_cache[members]
-        cost = self._compute_group_cost(members)
-        self._group_cache[members] = cost
-        return cost
+    def fitness_batch(self, states: Sequence[FusionState],
+                      objective: str = "edp") -> List[float]:
+        """Fitness for a whole offspring generation (GA hot path).
 
-    def _compute_group_cost(self, members: FrozenSet[str]
-                            ) -> Optional[Tuple[LayerCost, float]]:
+        Dedupes the generation by genome against the mask-keyed caches before
+        costing, so duplicate offspring and shared groups never re-enter the
+        cost model; per-state cost is assembled as the layerwise baseline plus
+        cached corrections from multi-member groups only (singleton groups —
+        the vast majority — contribute exactly their baseline cost, so they
+        are skipped).  Values may differ from :meth:`fitness` by float
+        re-association only (~1 ulp); selection order is unaffected in
+        practice and ``run_ga`` re-scores its final winner exactly.
+        """
+        self.batch_states += len(states)
+        uniq: Dict[int, float] = {}
+        out: List[float] = []
+        for s in states:
+            k = s.key()
+            f = uniq.get(k)
+            if f is None:
+                f = self._fitness_fast(s, objective)
+                uniq[k] = f
+            out.append(f)
+        self.batch_unique += len(uniq)
+        return out
+
+    def _fitness_fast(self, state: FusionState, objective: str) -> float:
+        """Baseline-plus-corrections fitness for bitmask states.
+
+        When the state carries a mutation delta and its parent's cost sums
+        are cached, only the removed/added groups are (un)applied — O(1) per
+        offspring; otherwise the sums are rebuilt from the layerwise baseline
+        plus every multi-member group's cached correction.
+        """
+        sched = state._sched                 # inlined is_schedulable (hot path)
+        if sched is None:
+            sched = state.is_schedulable()
+        if not sched:
+            self._sums[state.mask] = None
+            return 0.0
+        if self._base is None:
+            lw = self.layerwise()
+            self._base = (lw.energy_pj, lw.cycles, lw.dram_read_words,
+                          lw.dram_write_words, lw.act_write_events, lw.macs,
+                          {obj: lw.metric(obj)
+                           for obj in ("edp", "energy", "cycles", "dram")})
+        corr = self._corr
+        corr_get = corr.get
+        hits = 0
+        sums = None
+        delta = state._delta
+        if delta is not None:
+            psums = self._sums.get(delta[0])
+            if psums is not None:            # parent scored and valid
+                e, c, dr, dw, aw, mc = psums
+                ok = True
+                for gm in delta[1]:          # groups dissolved by the mutation
+                    d = corr_get(gm, _MISSING)
+                    if d is _MISSING or d is None:
+                        ok = False           # defensive: rebuild from scratch
+                        break
+                    hits += 1
+                    e -= d[0]
+                    c -= d[1]
+                    dr -= d[2]
+                    dw -= d[3]
+                    aw -= d[4]
+                    mc -= d[5]
+                if ok:
+                    self.sums_hits += 1
+                    for gm in delta[2]:      # groups created by the mutation
+                        d = corr_get(gm, _MISSING)
+                        if d is _MISSING:
+                            d = self._compute_correction(gm)
+                            corr[gm] = d
+                        else:
+                            hits += 1
+                        if d is None:        # over-capacity group: invalid
+                            self.group_hits += hits
+                            self._sums[state.mask] = None
+                            return 0.0
+                        e += d[0]
+                        c += d[1]
+                        dr += d[2]
+                        dw += d[3]
+                        aw += d[4]
+                        mc += d[5]
+                    sums = (e, c, dr, dw, aw, mc)
+        if sums is None:                     # no usable lineage: full rebuild
+            e, c, dr, dw, aw, mc = self._base[:6]
+            mgroups = state._mgroups         # inlined multi_masks (hot path)
+            if mgroups is None:
+                mgroups = state.multi_masks()
+            for gm in mgroups:               # singletons cost their baseline
+                d = corr_get(gm, _MISSING)
+                if d is _MISSING:
+                    d = self._compute_correction(gm)
+                    corr[gm] = d
+                else:
+                    hits += 1
+                if d is None:
+                    self.group_hits += hits
+                    self._sums[state.mask] = None
+                    return 0.0               # over-capacity group: invalid
+                e += d[0]
+                c += d[1]
+                dr += d[2]
+                dw += d[3]
+                aw += d[4]
+                mc += d[5]
+            sums = (e, c, dr, dw, aw, mc)
+        self.group_hits += hits
+        self._sums[state.mask] = sums
+        e, c, dr, dw = sums[0], sums[1], sums[2], sums[3]
+        if objective == "edp":
+            new = e * c
+        elif objective == "energy":
+            new = e
+        elif objective == "cycles":
+            new = c
+        else:
+            new = float(dr + dw)
+        return self._base[6][objective] / new if new > 0 else 0.0
+
+    def _compute_correction(self, gmask: int) -> GroupCost:
+        """Cost delta of fusing ``gmask``'s members vs leaving each layerwise."""
+        g = self._group_cost(gmask)
+        if g is None:
+            return None
+        e, c, dr, dw, aw, mc = g
+        for i in iter_bits(gmask):
+            s = self._group_cost(1 << i)
+            e -= s[0]
+            c -= s[1]
+            dr -= s[2]
+            dw -= s[3]
+            aw -= s[4]
+            mc -= s[5]
+        return (e, c, dr, dw, aw, mc)
+
+    def _group_cost(self, key: GroupKey) -> GroupCost:
+        cached = self._group_cache.get(key, _MISSING)
+        if cached is _MISSING:
+            cached = (self._compute_group_cost_mask(key)
+                      if isinstance(key, int)
+                      else self._compute_group_cost_members(key))
+            self._group_cache[key] = cached
+            self.group_misses += 1
+        else:
+            self.group_hits += 1
+        return cached
+
+    def cache_stats(self) -> Dict[str, float]:
+        """Cache-effectiveness counters.  ``group_hit_rate`` covers explicit
+        group-cost lookups only; on the GA hot path most states are served by
+        the parent-delta sums instead (no group lookups at all), which
+        ``delta_hit_rate`` reports — that is the headline number for batch
+        evaluation effectiveness."""
+        touches = self.group_hits + self.group_misses
+        return {
+            "unique_groups": len(self._group_cache),
+            "group_hits": self.group_hits,
+            "group_misses": self.group_misses,
+            "group_hit_rate": self.group_hits / touches if touches else 0.0,
+            "sums_hits": self.sums_hits,
+            "delta_hit_rate": (self.sums_hits / self.batch_unique
+                               if self.batch_unique else 0.0),
+            "states_evaluated": self.evals,
+            "batch_states": self.batch_states,
+            "batch_unique": self.batch_unique,
+        }
+
+    # ---- internals ------------------------------------------------------------------
+    def _evaluate_keys(self, keys: Sequence[GroupKey]
+                       ) -> Optional[ScheduleCost]:
+        e = 0.0
+        c = 0.0
+        dr = dw = aw = mc = 0
+        for key in keys:
+            g = self._group_cost(key)
+            if g is None:
+                return None
+            e += g[0]
+            c += g[1]
+            dr += g[2]
+            dw += g[3]
+            aw += g[4]
+            mc += g[5]
+        return ScheduleCost(
+            energy_pj=e, cycles=c, dram_read_words=dr, dram_write_words=dw,
+            act_write_events=aw, macs=mc, n_groups=len(keys),
+            clock_hz=self.clock_hz)
+
+    def _compute_group_cost_mask(self, gmask: int) -> GroupCost:
+        """Fast path: members given as a node bitmask, order and membership
+        tests all on integers."""
+        cg = self.cg
+        order = member_order_ids(cg.succ_ids, list(iter_bits(gmask)))
+        multi = sum(1 for i in order if cg.macs[i]) > 1
+
+        weight_passes = 1
+        if multi and len(order) > 1:
+            names_order = [cg.names[i] for i in order]
+            t = max_tile_rows(self.graph, names_order, self.acc.act_buf_words)
+            if t == 0:
+                return None                              # over-capacity: invalid
+            group_w = sum(cg.weight_size[i] for i in order)
+            if group_w > self.acc.weight_buf_words:
+                sink_p = max((cg.p[i] or 1) for i in order)
+                weight_passes = math.ceil(sink_p / t)
+
+        total = LayerCost()
+        compute_cycles = 0.0
+        dram_cycles = 0.0
+        for i in order:
+            preds = cg.pred_ids[i]
+            inputs_off = (not preds) or \
+                any(not (gmask >> p) & 1 for p in preds)
+            succs = cg.succ_ids[i]
+            outputs_off = (not succs) or \
+                any(not (gmask >> v) & 1 for v in succs)
+            lc = map_layer(cg.layers[i], self.acc, self.em,
+                           inputs_offchip=inputs_off,
+                           outputs_offchip=outputs_off,
+                           weight_stream_passes=weight_passes if multi else 1)
+            total += lc
+            compute_cycles += lc.compute_cycles
+            dram_cycles += lc.dram_cycles
+        # compute/DRAM overlap across the whole group pipeline
+        return (total.energy_pj, max(compute_cycles, dram_cycles),
+                total.dram_read_words, total.dram_write_words,
+                total.act_write_events, total.macs)
+
+    def _compute_group_cost_members(self, members: FrozenSet[str]
+                                    ) -> GroupCost:
+        """Reference path: members as a frozenset of layer names (used by
+        ``ReferenceFusionState``; kept operation-for-operation identical to
+        the fast path so both produce bit-equal costs)."""
         g = self.graph
         order = topological_sort_edges(
             [n for n in g.names if n in members], g.edges)
@@ -150,9 +399,9 @@ class Evaluator:
             total += lc
             compute_cycles += lc.compute_cycles
             dram_cycles += lc.dram_cycles
-        # compute/DRAM overlap across the whole group pipeline
-        group_cycles = max(compute_cycles, dram_cycles)
-        return total, group_cycles
+        return (total.energy_pj, max(compute_cycles, dram_cycles),
+                total.dram_read_words, total.dram_write_words,
+                total.act_write_events, total.macs)
 
     def _inputs_offchip(self, name: str, members: FrozenSet[str]) -> bool:
         preds = self.graph.preds(name)

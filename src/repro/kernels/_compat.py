@@ -1,0 +1,11 @@
+"""Version shims shared by the pallas kernels.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` across
+the 0.4.x/0.5.x series; resolve whichever this jax provides, once, here.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+    or getattr(_pltpu, "TPUCompilerParams")

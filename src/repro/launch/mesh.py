@@ -15,9 +15,11 @@ import jax
 
 
 def _mk(shape, axes):
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:                 # jax < 0.5: no explicit axis types
+        return jax.make_mesh(shape, axes)
     return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        shape, axes, axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -49,9 +49,11 @@ def mesh_axis_names() -> Tuple[str, ...]:
     mesh = current_mesh()
     if mesh is not None:
         return tuple(mesh.axis_names)
-    env = jax.sharding.get_abstract_mesh()
-    if env is not None and env.axis_names:
-        return tuple(env.axis_names)
+    get_abstract_mesh = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract_mesh is not None:        # added after jax 0.4.x
+        env = get_abstract_mesh()
+        if env is not None and env.axis_names:
+            return tuple(env.axis_names)
     try:  # bare `with mesh:` (physical mesh context)
         phys = jax._src.mesh.thread_resources.env.physical_mesh
         if phys is not None and not phys.empty:

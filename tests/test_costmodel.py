@@ -122,3 +122,21 @@ def test_edp_units():
     assert c.edp == pytest.approx(c.energy_pj * c.cycles)
     assert c.metric("edp") == c.edp
     assert c.metric("energy") == c.energy_pj
+
+
+def test_schedule_cost_seconds_uses_arch_clock():
+    """ScheduleCost.seconds must follow Accelerator.clock_mhz, not a
+    hard-coded 200 MHz."""
+    import dataclasses
+
+    g = chain(3)
+    fast_acc = dataclasses.replace(SIMBA, name="simba400", clock_mhz=400.0)
+    base = Evaluator(g, SIMBA).layerwise()
+    fast = Evaluator(g, fast_acc).layerwise()
+    assert base.clock_hz == pytest.approx(200e6)
+    assert fast.clock_hz == pytest.approx(400e6)
+    assert base.seconds == pytest.approx(base.cycles / 200e6)
+    assert fast.seconds == pytest.approx(fast.cycles / 400e6)
+    # same schedule, double the clock => half the time (DRAM words/cycle
+    # scale keeps the cost model's cycle counts comparable)
+    assert fast.seconds < base.seconds

@@ -1,0 +1,204 @@
+"""Incremental engine vs retained reference: bit-for-bit agreement.
+
+The GA hot path (``repro.core.fusion.FusionState`` + the mask-keyed
+``Evaluator`` fast path) must agree exactly with the original dict/frozenset
+implementation (``repro.core.fusion_ref.ReferenceFusionState``) on
+
+* ``groups()`` — same partition, same (first-seen) order,
+* ``is_schedulable()``,
+* ``evaluate()`` — identical :class:`ScheduleCost` including float fields,
+
+for randomly sampled fusion states on real paper workloads, and for states
+reached through long ``mutate`` chains (which exercise every incremental
+path: component merge, component split, same-partition flips, and the
+incremental condensation-cycle tests).  Also pins fixed-seed ``run_ga``
+determinism.
+"""
+import random
+
+import pytest
+
+from repro.core.fusion import FusionState
+from repro.core.fusion_ref import ReferenceFusionState
+from repro.core.ga import GAConfig, run_ga
+from repro.core.graph import Layer, LayerGraph
+from repro.costmodel import EYERISS, SIMBA, Evaluator
+from repro.workloads import mobilenet_v3_large, resnet50
+
+WORKLOADS = {
+    "mobilenet_v3": (mobilenet_v3_large, SIMBA),
+    "resnet50": (resnet50, EYERISS),
+}
+
+
+def _random_states(graph, rng, count):
+    """``count`` random genomes with mixed fused densities."""
+    edges = graph.edges
+    out = []
+    for _ in range(count):
+        p = rng.random()
+        out.append(frozenset(e for e in edges if rng.random() < p))
+    return out
+
+
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_random_states_agree_with_reference(name):
+    """100 random states per workload (200 total across the suite)."""
+    build, acc = WORKLOADS[name]
+    g = build()
+    ev_new = Evaluator(g, acc)
+    ev_ref = Evaluator(g, acc)
+    rng = random.Random(0xFACE)
+    for fused in _random_states(g, rng, 100):
+        s = FusionState(g, fused)
+        r = ReferenceFusionState(g, fused)
+        assert s.fused == r.fused
+        assert s.groups() == r.groups()
+        assert s.is_schedulable() == r.is_schedulable()
+        assert ev_new.evaluate(s) == ev_ref.evaluate(r)
+
+
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_mutation_chains_agree_with_reference(name):
+    """Long mutate chains hit the incremental merge/split/cycle-test paths."""
+    build, acc = WORKLOADS[name]
+    g = build()
+    ev_new = Evaluator(g, acc)
+    ev_ref = Evaluator(g, acc)
+    rng = random.Random(7)
+    s = FusionState.layerwise(g)
+    for i in range(400):
+        # materialize structure first so the next mutate takes the
+        # incremental path rather than recomputing from scratch
+        s.group_masks()
+        s.is_schedulable()
+        s = s.mutate(rng)
+        r = ReferenceFusionState(g, s.fused)
+        assert s.groups() == r.groups(), f"step {i}"
+        assert s.is_schedulable() == r.is_schedulable(), f"step {i}"
+        assert sorted(s.multi_masks()) == \
+            sorted(m for m in s.group_masks() if m & (m - 1)), f"step {i}"
+        if i % 10 == 0:
+            assert ev_new.evaluate(s) == ev_ref.evaluate(r), f"step {i}"
+
+
+def test_group_identity_helpers_agree():
+    g = mobilenet_v3_large()
+    rng = random.Random(3)
+    for fused in _random_states(g, rng, 10):
+        s = FusionState(g, fused)
+        r = ReferenceFusionState(g, fused)
+        assert s.group_edges() == r.group_edges()
+        assert s.offchip_tensors() == r.offchip_tensors()
+        for n in g.names:
+            assert s.group_of(n) == r.group_of(n)
+            assert s.tensor_offchip(n) == r.tensor_offchip(n)
+        if s.is_schedulable():
+            assert s.group_schedule(random.Random(11)) == \
+                r.group_schedule(random.Random(11))
+
+
+def test_batch_fitness_matches_exact_fitness():
+    """The batched baseline-plus-corrections path may re-associate float sums
+    but must agree with the exact per-state path to ~1 ulp."""
+    g = resnet50()
+    ev = Evaluator(g, SIMBA)
+    rng = random.Random(21)
+    states = [FusionState(g, f) for f in _random_states(g, rng, 40)]
+    batched = ev.fitness_batch(states)
+    for s, fb in zip(states, batched):
+        fx = ev.fitness(s)
+        assert fb == pytest.approx(fx, rel=1e-9, abs=1e-12)
+
+
+def _diamondish_graph():
+    """Re-converging DAG where condensation paths *descend* in node ids by
+    entering a multi-member group at a high-id member and leaving from a
+    low-id one — the shape that broke id-pruned reachability."""
+    g = LayerGraph("diamondish")
+    conv = dict(kind="conv", c=4, h=8, w=8, m=4, p=8, q=8, r=3, s=3,
+                padding=(1, 1))
+    g.add(Layer(name="n0", kind="input", m=4, p=8, q=8))
+    g.add(Layer(name="n1", **conv), ["n0"])
+    g.add(Layer(name="n2", **conv), ["n0"])
+    g.add(Layer(name="n3", kind="add", c=4, h=8, w=8, m=4, p=8, q=8),
+          ["n1", "n2"])
+    g.add(Layer(name="n6", **conv), ["n0"])
+    g.add(Layer(name="n8", **conv), ["n6"])
+    g.add(Layer(name="n11", kind="add", c=4, h=8, w=8, m=4, p=8, q=8),
+          ["n8", "n2"])
+    return g
+
+
+def test_incremental_cycle_test_sees_descending_paths():
+    """Regression: combine() on a schedulable parent whose new cycle runs
+    through a group entered at a high node id and left at a low one must be
+    detected (id-based BFS pruning was unsound here)."""
+    g = _diamondish_graph()
+    parent_fused = frozenset({("n0", "n1"), ("n0", "n6"), ("n2", "n11")})
+    parent = FusionState(g, parent_fused)
+    parent.group_masks()
+    assert parent.is_schedulable()
+    child = parent.combine(("n1", "n3"))
+    ref = ReferenceFusionState(g, child.fused)
+    assert child.is_schedulable() == ref.is_schedulable() == False  # noqa: E712
+
+
+def _random_dag(rng, n_nodes):
+    g = LayerGraph(f"rand{n_nodes}")
+    conv = dict(kind="conv", c=4, h=8, w=8, m=4, p=8, q=8, r=3, s=3,
+                padding=(1, 1))
+    g.add(Layer(name="n0", kind="input", m=4, p=8, q=8))
+    for i in range(1, n_nodes):
+        k = rng.randint(1, min(3, i))
+        preds = rng.sample([f"n{j}" for j in range(i)], k)
+        if k == 1:
+            g.add(Layer(name=f"n{i}", **conv), preds)
+        else:
+            g.add(Layer(name=f"n{i}", kind="add", c=4, h=8, w=8,
+                        m=4, p=8, q=8), preds)
+    return g
+
+
+def test_mutation_chains_agree_on_random_dags():
+    """Randomized topologies: 60 random re-converging DAGs x 60-step mutate
+    chains, incremental groups/schedulability vs the reference each step."""
+    rng = random.Random(0xDA6)
+    for trial in range(60):
+        g = _random_dag(rng, rng.randint(5, 14))
+        s = FusionState.layerwise(g)
+        for step in range(60):
+            s.group_masks()
+            s.is_schedulable()
+            s = s.mutate(rng)
+            r = ReferenceFusionState(g, s.fused)
+            assert s.groups() == r.groups(), (trial, step)
+            assert s.is_schedulable() == r.is_schedulable(), (trial, step)
+
+
+def test_parallel_edges_share_one_genome_bit():
+    """A layer consuming the same producer twice (x + x) yields parallel
+    edges; the bitmask genome must collapse them like the reference
+    frozenset does, or one logical genome gets several unequal masks."""
+    g = LayerGraph("selfadd")
+    g.add(Layer(name="a", kind="input", m=4, p=8, q=8))
+    g.add(Layer(name="dbl", kind="add", c=4, h=8, w=8, m=4, p=8, q=8),
+          ["a", "a"])
+    s1 = FusionState(g, frozenset({("a", "dbl")}))
+    s2 = FusionState.fully_fused(g)
+    assert s1 == s2 and hash(s1) == hash(s2) and s1.key() == s2.key()
+    r = ReferenceFusionState.fully_fused(g)
+    assert s1.groups() == r.groups()
+    assert s1.is_schedulable() == r.is_schedulable()
+
+
+def test_run_ga_deterministic_at_fixed_seed():
+    g = mobilenet_v3_large()
+    cfg = GAConfig.fast(generations=12, seed=5)
+    r1 = run_ga(g, Evaluator(g, SIMBA), cfg)
+    r2 = run_ga(g, Evaluator(g, SIMBA), cfg)
+    assert r1.history == r2.history
+    assert r1.best_fitness == r2.best_fitness
+    assert r1.best_state.mask == r2.best_state.mask
+    assert r1.offspring_evaluated == r2.offspring_evaluated
+    assert r1.evaluations == r2.evaluations
