@@ -1,42 +1,39 @@
 """Paper Fig. 10 + §VI: 3 CNNs x 3 accelerators, energy + EDP improvement
-and geometric means.  Claims checked: MobileNet-v3 on SIMBA ~1.8x energy /
-1.9x EDP; SIMBA-family geomean EDP ~1.4x; Eyeriss ~1.12x EDP (paper quotes
-1.12-1.15x)."""
+and geometric means, searched through the ``repro.search`` facade.  Claims
+checked: MobileNet-v3 on SIMBA ~1.8x energy / 1.9x EDP; SIMBA-family
+geomean EDP ~1.4x; Eyeriss ~1.12x EDP (paper quotes 1.12-1.15x)."""
 from __future__ import annotations
 
 import math
 
-from repro.core import GAConfig, optimize
-from repro.costmodel import EYERISS, SIMBA, SIMBA2X2
-from repro.workloads import mobilenet_v3_large, resnet50, unet
+from repro.search import search
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit
+
+NETS = ("mobilenet_v3", "unet", "resnet50")
+ARCHS = ("simba", "simba2x2", "eyeriss")
 
 
 def run(full: bool = False):
     ga_gens = 500 if full else 150
-    nets = [("mobilenet_v3", mobilenet_v3_large), ("unet", unet),
-            ("resnet50", resnet50)]
-    archs = [SIMBA, SIMBA2X2, EYERISS]
     results = {}
-    for nname, build in nets:
-        g = build()
-        for acc in archs:
-            ga = GAConfig(generations=ga_gens, seed=0)
-            us, res = time_call(lambda: optimize(g, acc, ga), repeats=1)
-            s = res.summary()
-            results[(nname, acc.name)] = s
-            emit(f"fig10_{nname}_{acc.name}", us,
+    for net in NETS:
+        for arch in ARCHS:
+            artifact = search(net, arch, backend="ga", seed=0,
+                              backend_config={"generations": ga_gens})
+            s = artifact.summary()
+            results[(net, arch)] = s
+            emit(f"fig10_{net}_{arch}", artifact.wall_s * 1e6,
                  f"energy_x={s['energy_x']};edp_x={s['edp_x']}")
-    for acc in archs:
-        geo_e = math.prod(results[(n, acc.name)]["energy_x"]
-                          for n, _ in nets) ** (1 / len(nets))
-        geo_d = math.prod(results[(n, acc.name)]["edp_x"]
-                          for n, _ in nets) ** (1 / len(nets))
+    for arch in ARCHS:
+        geo_e = math.prod(results[(n, arch)]["energy_x"]
+                          for n in NETS) ** (1 / len(NETS))
+        geo_d = math.prod(results[(n, arch)]["edp_x"]
+                          for n in NETS) ** (1 / len(NETS))
         paper = {"simba": "1.4", "simba2x2": "1.4", "eyeriss": "1.12"}
-        emit(f"fig10_geomean_{acc.name}", 0.0,
+        emit(f"fig10_geomean_{arch}", 0.0,
              f"energy_x={geo_e:.3f};edp_x={geo_d:.3f};"
-             f"paper_edp={paper[acc.name]}")
+             f"paper_edp={paper[arch]}")
 
 
 if __name__ == "__main__":

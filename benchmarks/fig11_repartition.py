@@ -1,54 +1,54 @@
 """Paper Fig. 11 + §IV-A: Eyeriss activation/weight buffer repartitioning at
-iso-capacity, ResNet-50.  Trades 16 KiB steps of weight buffer for
-activation buffer and re-runs the GA at each point.  Claim checked:
-repartitioning improves EDP ~1.2x (paper: 1.2-1.25x over baseline)."""
+iso-capacity, ResNet-50, searched through the ``repro.search`` facade's
+``eyeriss@act<delta>`` accelerator specs.  Trades 16 KiB steps of weight
+buffer for activation buffer and re-runs the GA at each point.  Claim
+checked: repartitioning improves EDP ~1.2x (paper: 1.2-1.25x over
+baseline)."""
 from __future__ import annotations
 
-from repro.core import GAConfig, optimize
-from repro.costmodel import EYERISS
-from repro.workloads import resnet50
+from repro.search import build_accelerator, search
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit
 
 
 def run(full: bool = False):
     ga_gens = 500 if full else 100
-    g = resnet50()
     base = None
     best = (None, 0.0)
     for delta in (-64, -32, 0, 32, 64, 96, 128):
-        acc = EYERISS.repartition(delta)
-        ga = GAConfig(generations=ga_gens, seed=0)
-        us, res = time_call(lambda: optimize(g, acc, ga), repeats=1)
-        edp = res.best.edp
-        energy = res.best.energy_pj
-        cycles = res.best.cycles
+        accel = f"eyeriss@act{delta:+d}"
+        acc = build_accelerator(accel)
+        artifact = search("resnet50", accel, backend="ga", seed=0,
+                          backend_config={"generations": ga_gens})
+        edp = artifact.best.edp
+        energy = artifact.best.energy_pj
+        cycles = artifact.best.cycles
         if delta == 0:
             base = (edp, energy, cycles)
-        emit(f"fig11_act{acc.act_buf_kib}k_w{acc.weight_buf_kib}k", us,
+        emit(f"fig11_act{acc.act_buf_kib}k_w{acc.weight_buf_kib}k",
+             artifact.wall_s * 1e6,
              f"edp={edp:.3e};energy_pj={energy:.3e};cycles={cycles:.3e}")
         if best[0] is None or edp < best[1]:
-            best = (acc, edp)
+            best = (accel, edp)
     assert base is not None
     emit("fig11_best_repartition", 0.0,
-         f"arch={best[0].name};edp_x_vs_base={base[0] / best[1]:.3f};"
+         f"arch={best[0]};edp_x_vs_base={base[0] / best[1]:.3f};"
          f"paper=1.2")
 
     # beyond-paper extra: the same sweep on the activation-heavy workload
     # (MobileNet-v3), where act-buffer capacity binds fusion depth hardest
-    from repro.workloads import mobilenet_v3_large
-    gm = mobilenet_v3_large()
     base_m = None
     best_m = None
     for delta in (-64, 0, 64, 128):
-        acc = EYERISS.repartition(delta)
-        r = optimize(gm, acc, GAConfig(generations=ga_gens, seed=0))
+        accel = f"eyeriss@act{delta:+d}"
+        artifact = search("mobilenet_v3", accel, backend="ga", seed=0,
+                          backend_config={"generations": ga_gens})
         if delta == 0:
-            base_m = r.best.edp
-        if best_m is None or r.best.edp < best_m:
-            best_m = r.best.edp
-        emit(f"fig11x_mobilenet_act{acc.act_buf_kib}k", 0.0,
-             f"edp={r.best.edp:.3e}")
+            base_m = artifact.best.edp
+        if best_m is None or artifact.best.edp < best_m:
+            best_m = artifact.best.edp
+        emit(f"fig11x_mobilenet_act{build_accelerator(accel).act_buf_kib}k",
+             0.0, f"edp={artifact.best.edp:.3e}")
     emit("fig11x_mobilenet_best", 0.0,
          f"edp_x_vs_base={base_m / best_m:.3f}")
 

@@ -1,23 +1,23 @@
 """Paper Fig. 9 + §IV: ResNet-50 on SIMBA-2x2 — the GA's automated fused
-schedule.  Claims checked: overall EDP improvement (paper: 1.2x), larger
-gains in early layers (paper: up to 2.7x), DRAM activation-write events
-drop (paper: 50 -> 15)."""
+schedule, searched through the ``repro.search`` facade.  Claims checked:
+overall EDP improvement (paper: 1.2x), larger gains in early layers (paper:
+up to 2.7x), DRAM activation-write events drop (paper: 50 -> 15)."""
 from __future__ import annotations
 
-from repro.core import GAConfig, optimize
-from repro.costmodel import SIMBA2X2, Evaluator
-from repro.costmodel.mapper import map_layer
-from repro.workloads import resnet50
+from repro.core.fusion import FusionState
+from repro.search import SearchSession, SearchSpec
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit
 
 
 def run(full: bool = False):
-    ga = GAConfig(generations=500 if full else 120, seed=0)
-    g = resnet50()
-    us, res = time_call(lambda: optimize(g, SIMBA2X2, ga), repeats=1)
-    s = res.summary()
-    emit("fig9_resnet50_simba2x2_edp", us,
+    spec = SearchSpec(
+        workload="resnet50", accelerator="simba2x2", backend="ga",
+        backend_config={"generations": 500 if full else 120}, seed=0)
+    session = SearchSession(spec)
+    artifact = session.run()
+    s = artifact.summary()
+    emit("fig9_resnet50_simba2x2_edp", artifact.wall_s * 1e6,
          f"edp_x={s['edp_x']};paper=1.2")
     emit("fig9_resnet50_simba2x2_energy", 0.0, f"energy_x={s['energy_x']}")
     emit("fig9_dram_act_writes", 0.0,
@@ -26,13 +26,14 @@ def run(full: bool = False):
     emit("fig9_n_fused_groups", 0.0, f"groups={s['groups']}")
 
     # per-region improvement: early (stage 1-2) vs late layers, approximated
-    # by splitting the schedule's groups by position
-    ev = Evaluator(g, SIMBA2X2)
-    best = res.best_state
+    # by splitting the schedule's groups by position (reuses the session's
+    # memoized evaluator — no re-costing)
+    g = session.graph
+    ev = session.evaluator
+    best = session.result.best_state
     names = [n for n in g.names]
     early = set(names[:len(names) // 3])
     e_base_early = e_best_early = e_base_late = e_best_late = 0.0
-    from repro.core.fusion import FusionState
     lw = FusionState.layerwise(g)
     for state, accum in ((lw, "base"), (best, "best")):
         for group in state.groups():

@@ -1,29 +1,27 @@
 """Alg. 1 behaviour: GA fitness convergence trace (MobileNet-v3 / SIMBA),
-search-engine throughput, and evaluation-cache effectiveness.
+search-engine throughput, and evaluation-cache effectiveness — run through
+the ``repro.search`` facade.
 
 Emits the headline GA perf metric, ``evals_per_sec`` — offspring evaluated
-per second of wall time over the whole ``run_ga`` call (100 gens, seed 0;
+per second of backend wall time over the whole search (100 gens, seed 0;
 ``--full`` restores the paper's 500 gens).  See ``benchmarks/README.md`` for
 how to compare runs against a saved ``BENCH_*.json`` baseline.
 """
 from __future__ import annotations
 
-import time
-
-from repro.core import GAConfig, run_ga
-from repro.costmodel import SIMBA, Evaluator
-from repro.workloads import mobilenet_v3_large
+from repro.search import SearchSession, SearchSpec
 
 from benchmarks.common import emit, record
 
 
 def run(full: bool = False):
-    g = mobilenet_v3_large()
-    ev = Evaluator(g, SIMBA)
-    ga = GAConfig(generations=500 if full else 100, seed=0)
-    t0 = time.perf_counter()
-    res = run_ga(g, ev, ga)
-    wall_s = time.perf_counter() - t0
+    spec = SearchSpec(
+        workload="mobilenet_v3", accelerator="simba", backend="ga",
+        backend_config={"generations": 500 if full else 100}, seed=0)
+    session = SearchSession(spec)
+    artifact = session.run()
+    res = session.result
+    wall_s = artifact.wall_s
 
     h = res.history
     marks = {0: h[0], len(h) // 4: h[len(h) // 4], len(h) // 2: h[len(h) // 2],
@@ -31,6 +29,7 @@ def run(full: bool = False):
     trace = ";".join(f"g{k}={v:.3f}" for k, v in sorted(marks.items()))
     emit("ga_convergence_fitness", wall_s * 1e6, trace)
 
+    ev = session.evaluator
     stats = ev.cache_stats()
     evals_per_sec = res.offspring_evaluated / wall_s if wall_s > 0 else 0.0
     emit("ga_throughput", wall_s * 1e6,
@@ -39,12 +38,12 @@ def run(full: bool = False):
          f"unique_states={res.evaluations}")
     emit("ga_evaluations", 0.0,
          f"unique_states={res.evaluations};"
-         f"group_cache={len(ev._group_cache)};"
+         f"group_cache={stats['unique_groups']};"
          f"group_hit_rate={stats['group_hit_rate']:.4f};"
          f"delta_hit_rate={stats['delta_hit_rate']:.4f}")
     record("ga_convergence",
-           workload=g.name, accelerator="simba",
-           generations=ga.generations, seed=ga.seed,
+           workload=spec.workload, accelerator=spec.accelerator,
+           generations=spec.backend_config["generations"], seed=spec.seed,
            wall_s=round(wall_s, 4),
            evals_per_sec=round(evals_per_sec, 1),
            offspring_evaluated=res.offspring_evaluated,

@@ -39,6 +39,10 @@ def main() -> None:
     }
     selected = [s.strip() for s in args.only.split(",") if s.strip()] \
         or list(suites)
+    unknown = [s for s in selected if s not in suites]
+    if unknown:
+        ap.error(f"unknown --only name(s) {', '.join(sorted(unknown))}; "
+                 f"valid: {', '.join(suites)}")
     print("name,us_per_call,derived")
     failures = 0
     for name in selected:

@@ -1,12 +1,13 @@
 """Beyond-paper: the TPU scheduling GA on the three hillclimb cells —
 predicted step-time / EDP / HBM residency, baseline vs GA-selected schedule
-(validated against compiled artifacts in EXPERIMENTS.md §Perf)."""
+(validated against compiled artifacts in EXPERIMENTS.md §Perf).  Runs the
+TPU genome through the shared ``repro.search`` backend protocol."""
 from __future__ import annotations
 
 from repro.configs import get_config
 from repro.configs.base import SHAPES
 from repro.core.ga import GAConfig
-from repro.core.tpu_ga import optimize_tpu_schedule
+from repro.search.tpu import search_tpu_schedule
 
 from benchmarks.common import emit, time_call
 
@@ -23,7 +24,7 @@ def run(full: bool = False):
         shape = SHAPES[shape_name]
         ga = GAConfig.fast(generations=40 if full else 20)
         us, res = time_call(
-            lambda: optimize_tpu_schedule(cfg, shape, ga=ga), repeats=1)
+            lambda: search_tpu_schedule(cfg, shape, ga=ga), repeats=1)
         b, o = res.baseline_cost, res.best_cost
         fits = "fits" if b.hbm_resident_bytes <= 16e9 else "OOM"
         emit(f"tpu_ga_{arch}_{shape_name}", us,

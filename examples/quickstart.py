@@ -1,49 +1,63 @@
-"""Quickstart: the paper's pipeline in one page.
+"""Quickstart: the paper's pipeline in one page, on the `repro.search` facade.
 
 Builds MobileNet-v3, runs the GA interlayer scheduler against the SIMBA-like
 accelerator, and prints the energy/EDP improvements over the layerwise
-(per-layer Timeloop-style) baseline — the paper's headline experiment.
+(per-layer Timeloop-style) baseline — the paper's headline experiment.  The
+search result is saved as a JSON artifact that `repro report` can summarize
+later without re-searching.
 
-    PYTHONPATH=src python examples/quickstart.py [--full]
+    pip install -e .   (or: export PYTHONPATH=src)
+    python examples/quickstart.py [--full] [--out artifact.json]
+
+CLI equivalent:
+
+    repro search --workload mobilenet_v3 --accel simba --backend ga \\
+        --preset fast --generations 60 --out artifact.json
+    repro report artifact.json --schedule
 """
 import argparse
-import sys
 
-sys.path.insert(0, "src")
-
-from repro.core import GAConfig, optimize
 from repro.core.report import schedule_report
-from repro.costmodel import EYERISS, SIMBA
-from repro.workloads import mobilenet_v3_large
+from repro.search import SearchSession, SearchSpec, build_accelerator
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper GA settings (P=100, G=500)")
+    ap.add_argument("--out", default="",
+                    help="also save the SIMBA artifact to this path")
     args = ap.parse_args()
 
-    ga = GAConfig(generations=500, seed=0) if args.full else \
-        GAConfig.fast(generations=60, seed=0)
+    backend_config = {"preset": "paper", "generations": 500} if args.full \
+        else {"preset": "fast", "generations": 60}
 
-    g = mobilenet_v3_large()
-    print(f"workload: {g}")
-    for acc in (SIMBA, EYERISS):
-        res = optimize(g, acc, ga)
-        s = res.summary()
-        print(f"\n=== {acc.name} ===")
+    for accel in ("simba", "eyeriss"):
+        spec = SearchSpec(workload="mobilenet_v3", accelerator=accel,
+                          backend="ga", backend_config=backend_config,
+                          seed=0)
+        session = SearchSession(spec)
+        artifact = session.run()
+        s = artifact.summary()
+        print(f"\n=== {accel} ===")
         print(f"  energy improvement : {s['energy_x']:.2f}x "
               f"(paper: 1.8x on SIMBA for MobileNet-v3)")
         print(f"  EDP improvement    : {s['edp_x']:.2f}x (paper: 1.9x)")
         print(f"  DRAM activation writes: {s['act_dram_writes_base']} -> "
               f"{s['act_dram_writes_best']}")
         print(f"  fused groups       : {s['groups']} "
-              f"(from {len(g.names)} layers)")
-        print(f"  GA evaluations     : {s['ga_evaluations']}")
-        if acc is SIMBA:
+              f"(from {len(session.graph.names)} layers)")
+        print(f"  GA evaluations     : {artifact.evaluations} "
+              f"in {artifact.wall_s:.1f}s")
+        if accel == "simba":
             print("\n  schedule (paper Fig. 9 analogue, first groups):")
-            print("  " + schedule_report(res, acc, max_rows=10
-                                         ).replace("\n", "\n  "))
+            print("  " + schedule_report(session.schedule_result(),
+                                         build_accelerator(accel),
+                                         max_rows=10).replace("\n", "\n  "))
+            if args.out:
+                artifact.save(args.out)
+                print(f"\n  artifact saved to {args.out} "
+                      f"(summarize with: repro report {args.out})")
 
 
 if __name__ == "__main__":

@@ -1,41 +1,47 @@
-"""Beyond-paper example: the paper's GA re-targeted at TPU training
-schedules (remat policy x microbatching x gradient compression), costed with
-the analytical v5e roofline model — then the chosen schedule is what
-`repro.launch.dryrun --remat ... --microbatches ...` validates by compiling.
+"""Beyond-paper example: the paper's search re-targeted at TPU training
+schedules (remat policy x microbatching x gradient compression x sharding),
+costed with the analytical v5e roofline model — then the chosen schedule is
+what `repro.launch.dryrun --remat ... --microbatches ...` validates by
+compiling.
 
-    PYTHONPATH=src python examples/schedule_search.py --arch dbrx-132b
+The TPU genome runs through the same `repro.search` backend protocol as the
+paper's fusion states, so any registered backend applies; the space is only
+60 schedules, so `--backend exhaustive` gives the ground-truth optimum to
+compare the GA against.
+
+    pip install -e .   (or: export PYTHONPATH=src)
+    python examples/schedule_search.py --arch dbrx-132b [--backend ga]
 """
 import argparse
-import sys
-
-sys.path.insert(0, "src")
 
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import SHAPES
 from repro.core.ga import GAConfig
-from repro.core.tpu_ga import optimize_tpu_schedule
+from repro.search import BACKENDS
+from repro.search.tpu import search_tpu_schedule
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="dbrx-132b", choices=ARCH_IDS)
     ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    ap.add_argument("--backend", default="ga", choices=BACKENDS.names())
     ap.add_argument("--generations", type=int, default=30)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
-    res = optimize_tpu_schedule(
-        cfg, SHAPES[args.shape],
+    res = search_tpu_schedule(
+        cfg, SHAPES[args.shape], backend=args.backend,
         ga=GAConfig.fast(generations=args.generations))
     b, o = res.baseline_cost, res.best_cost
     print(f"arch: {args.arch}  shape: {args.shape}  "
-          f"({cfg.n_params / 1e9:.0f}B params)")
+          f"({cfg.n_params / 1e9:.0f}B params)  backend: {args.backend}")
     print(f"\nbaseline (paper-faithful: no remat, no microbatching):")
     fits = "fits HBM" if b.hbm_resident_bytes <= 16e9 else \
         "DOES NOT FIT 16 GB HBM"
     print(f"  step {b.step_s * 1e3:7.1f} ms  dominant={b.dominant}  "
           f"resident {b.hbm_resident_bytes / 1e9:.1f} GB/chip  [{fits}]")
-    print(f"\nGA-selected schedule: remat={res.best.remat}, "
+    print(f"\nselected schedule: remat={res.best.remat}, "
           f"microbatches={res.best.microbatches}, "
           f"grad_compression={res.best.grad_compression}")
     print(f"  step {o.step_s * 1e3:7.1f} ms  dominant={o.dominant}  "

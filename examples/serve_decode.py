@@ -2,14 +2,12 @@
 continuations with the KV cache, verify against the full forward pass, and
 report throughput.
 
-    PYTHONPATH=src python examples/serve_decode.py --arch qwen2-7b --tokens 32
+    pip install -e .   (or: export PYTHONPATH=src)
+    python examples/serve_decode.py --arch qwen2-7b --tokens 32
 """
 import argparse
 import dataclasses
-import sys
 import time
-
-sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp

@@ -2,15 +2,13 @@
 steps on the synthetic pipeline, with checkpointing and (optionally) an
 injected failure to demonstrate restart-exactly-once.
 
-    PYTHONPATH=src python examples/train_lm.py --size 25m --steps 300
-    PYTHONPATH=src python examples/train_lm.py --size 100m --steps 200
-    PYTHONPATH=src python examples/train_lm.py --inject-failure 60
+    pip install -e .   (or: export PYTHONPATH=src)
+    python examples/train_lm.py --size 25m --steps 300
+    python examples/train_lm.py --size 100m --steps 200
+    python examples/train_lm.py --inject-failure 60
 """
 import argparse
-import sys
 import time
-
-sys.path.insert(0, "src")
 
 from repro.configs.base import ModelConfig
 from repro.launch.train import TrainRunConfig, train_loop

@@ -1,0 +1,11 @@
+"""Reproduction of "Improvements in Interlayer Pipelining of CNN
+Accelerators Using Genetic Algorithms", grown toward a production-scale
+scheduling system.
+
+Start at ``repro.search`` (the pluggable search facade) or the CLI:
+
+    repro search --workload mobilenet_v3 --accel simba --backend ga \\
+        --out artifact.json
+    repro report artifact.json
+"""
+__version__ = "0.2.0"

@@ -1,0 +1,185 @@
+"""The ``repro`` CLI: run searches, inspect artifacts, list registries.
+
+    repro search --workload mobilenet_v3 --accel simba --backend ga \\
+        --out artifact.json
+    repro report artifact.json [--schedule] [--history]
+    repro list
+
+(Also reachable as ``python -m repro ...`` with ``PYTHONPATH=src``.)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+
+def _add_search_parser(sub) -> None:
+    p = sub.add_parser(
+        "search", help="run a schedule search and write a JSON artifact")
+    p.add_argument("--workload", required=True,
+                   help="registered workload name (see `repro list`)")
+    p.add_argument("--workload-kwargs", default="{}", metavar="JSON",
+                   help="builder kwargs, e.g. '{\"hw\": 128}'")
+    p.add_argument("--accel", default="simba",
+                   help="accelerator template, optionally repartitioned "
+                        "(e.g. eyeriss@act+64)")
+    p.add_argument("--objective", default="edp",
+                   help="registered objective (edp|energy|cycles|dram|...)")
+    p.add_argument("--backend", default="ga",
+                   help="search backend (ga|random|hill_climb|exhaustive|...)")
+    p.add_argument("--backend-config", default="{}", metavar="JSON",
+                   help="backend options, e.g. '{\"crossover_rate\": 0.1}'")
+    p.add_argument("--preset", choices=("paper", "fast"), default=None,
+                   help="ga preset (paper: P=100 G=500; fast: CPU-friendly)")
+    p.add_argument("--generations", type=int, default=None,
+                   help="ga generations override")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--budget", type=int, default=None,
+                   help="stop after this many offspring evaluations")
+    p.add_argument("--patience", type=int, default=None,
+                   help="stop after N generations without improvement")
+    p.add_argument("--out", default="artifact.json",
+                   help="artifact path (default: artifact.json)")
+    p.add_argument("--progress", type=int, default=0, metavar="N",
+                   help="print progress every N backend steps")
+
+
+def _add_report_parser(sub) -> None:
+    p = sub.add_parser(
+        "report", help="summarize a search artifact (no re-search)")
+    p.add_argument("artifact", help="path to a ScheduleArtifact JSON")
+    p.add_argument("--schedule", action="store_true",
+                   help="rebuild the workload and render the fused schedule "
+                        "(paper Fig. 9 analogue)")
+    p.add_argument("--history", action="store_true",
+                   help="print the convergence history trace")
+    p.add_argument("--json", action="store_true",
+                   help="emit the summary as JSON")
+
+
+def _cmd_search(args) -> int:
+    from repro.search import search
+
+    backend_config = json.loads(args.backend_config)
+    if args.preset is not None:
+        backend_config.setdefault("preset", args.preset)
+    if args.generations is not None:
+        backend_config.setdefault("generations", args.generations)
+
+    every = args.progress
+
+    def progress(p) -> None:
+        if every and p.step % every == 0:
+            print(f"  step {p.step:>5}  best {p.best_fitness:.4f}  "
+                  f"evals {p.evaluations}", file=sys.stderr)
+
+    artifact = search(
+        args.workload, args.accel, objective=args.objective,
+        backend=args.backend, seed=args.seed, budget=args.budget,
+        patience=args.patience, backend_config=backend_config,
+        workload_kwargs=json.loads(args.workload_kwargs),
+        progress=progress if every else None)
+    artifact.save(args.out)
+    s = artifact.summary()
+    print(f"{s['workload']} on {s['accelerator']} [{s['backend']}, "
+          f"seed {s['seed']}]: "
+          f"energy x{s['energy_x']}  {artifact.spec.objective} best "
+          f"{artifact.best_fitness:.4f}  edp x{s['edp_x']}  "
+          f"groups {s['groups']}  "
+          f"({artifact.evaluations} evals, {artifact.wall_s:.1f}s)")
+    print(f"wrote {args.out}")
+    return 0
+
+
+def _cmd_report(args) -> int:
+    from repro.search import ScheduleArtifact
+
+    artifact = ScheduleArtifact.load(args.artifact)
+    s = artifact.summary()
+    if args.json:
+        print(json.dumps(s, indent=2, sort_keys=True))
+    else:
+        print(f"workload     : {s['workload']} "
+              f"(kwargs {artifact.spec.workload_kwargs})")
+        print(f"accelerator  : {s['accelerator']}")
+        print(f"backend      : {s['backend']} (seed {s['seed']}, "
+              f"{artifact.evaluations} unique evals, "
+              f"{artifact.wall_s:.1f}s)")
+        print(f"objective    : {artifact.spec.objective} "
+              f"(best fitness {artifact.best_fitness:.4f})")
+        print(f"improvements : energy x{s['energy_x']}  edp x{s['edp_x']}  "
+              f"cycles x{s['cycles_x']}  dram x{s['dram_x']}")
+        print(f"schedule     : {s['groups']} fused groups, DRAM act-writes "
+              f"{s['act_dram_writes_base']} -> {s['act_dram_writes_best']}")
+        print(f"genome       : {artifact.genome_mask:#x} "
+              f"({len(artifact.fused_edges)}/{artifact.n_edges} edges fused)")
+        print(f"fingerprint  : {artifact.graph_fingerprint}")
+    if args.history and artifact.history:
+        h = artifact.history
+        marks = sorted({0, len(h) // 4, len(h) // 2, 3 * len(h) // 4,
+                        len(h) - 1})
+        print("history      : "
+              + "  ".join(f"s{i}={h[i]:.4f}" for i in marks))
+    if args.schedule:
+        from repro.core.report import schedule_report
+        from repro.search.registry import build_accelerator
+        res = _schedule_result(artifact)
+        print()
+        print(schedule_report(res, build_accelerator(
+            artifact.spec.accelerator)))
+    return 0
+
+
+def _schedule_result(artifact):
+    """Rebuild a ScheduleResult view from a stored artifact (validates the
+    graph fingerprint; no re-search)."""
+    from repro.core.ga import GAResult
+    from repro.core.schedule import ScheduleResult
+    state = artifact.rebuild_state()
+    ga = GAResult(best_state=state, best_fitness=artifact.best_fitness,
+                  history=list(artifact.history),
+                  evaluations=artifact.evaluations,
+                  offspring_evaluated=artifact.offspring_evaluated)
+    return ScheduleResult(
+        workload=artifact.spec.workload,
+        accelerator=artifact.spec.accelerator,
+        baseline=artifact.baseline, best=artifact.best,
+        best_state=state, ga=ga)
+
+
+def _cmd_list(_args) -> int:
+    from repro.search import ACCELERATORS, BACKENDS, OBJECTIVES, WORKLOADS
+    for reg in (WORKLOADS, ACCELERATORS, OBJECTIVES, BACKENDS):
+        print(f"{reg.kind}s: " + ", ".join(reg.names()))
+    print("(accelerators accept an iso-capacity repartition suffix: "
+          "eyeriss@act+64)")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro",
+        description="GA-driven interlayer pipelining: search schedules, "
+                    "report artifacts.")
+    sub = ap.add_subparsers(dest="command", required=True)
+    _add_search_parser(sub)
+    _add_report_parser(sub)
+    sub.add_parser("list", help="list registered workloads / accelerators / "
+                                "objectives / backends")
+    args = ap.parse_args(argv)
+
+    from repro.search import BackendError, FingerprintMismatch, RegistryError
+    handler = {"search": _cmd_search, "report": _cmd_report,
+               "list": _cmd_list}[args.command]
+    try:
+        return handler(args)
+    except (RegistryError, BackendError, FingerprintMismatch,
+            FileNotFoundError, json.JSONDecodeError, ValueError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

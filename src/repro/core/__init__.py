@@ -3,10 +3,11 @@ scheduling over a layer graph, with topological-sort dependency enforcement
 and receptive-field-based capacity checks."""
 from repro.core.fusion import FusionState
 from repro.core.fusion_ref import ReferenceFusionState
-from repro.core.ga import GAConfig, GAResult, run_ga
+from repro.core.ga import GAConfig, GAResult, run_ga, run_ga_problem
 from repro.core.graph import CompiledGraph, Layer, LayerGraph
+from repro.core.problem import FusionProblem, SearchProblem
 from repro.core.schedule import ScheduleResult, optimize
 
 __all__ = ["FusionState", "ReferenceFusionState", "GAConfig", "GAResult",
-           "run_ga", "CompiledGraph", "Layer", "LayerGraph",
-           "ScheduleResult", "optimize"]
+           "run_ga", "run_ga_problem", "CompiledGraph", "Layer", "LayerGraph",
+           "FusionProblem", "SearchProblem", "ScheduleResult", "optimize"]

@@ -16,21 +16,28 @@ Faithful to the paper's configuration:
   making ``population`` dead configuration);
 * ``G = 500`` generations.
 
-Evaluation is delegated to a memoizing :class:`repro.costmodel.evaluator.
-Evaluator` (or any object with the same ``fitness``/``evaluate`` protocol,
-e.g. the TPU roofline evaluator in ``repro.core.tpu_ga``), so the engine is
-cost-model agnostic.  Whole generations are scored through
-``evaluator.fitness_batch`` when available, which dedupes offspring against
+The selection loop itself is genome-agnostic: :func:`run_ga_problem` runs
+Alg. 1 against any :class:`repro.core.problem.SearchProblem` (fusion states,
+TPU schedules, ...), and :func:`run_ga` is the fusion-problem entry point —
+it delegates to the same loop through
+:class:`repro.core.problem.FusionProblem`, making exactly the RNG calls of
+earlier revisions so fixed-seed results are bit-for-bit unchanged.  Whole
+generations are scored through ``problem.fitness_batch`` (backed by
+``Evaluator.fitness_batch`` when available), which dedupes offspring against
 the evaluator's group-cost cache before costing only novel groups.
+
+``repro.search`` packages this loop (plus random / hill-climb / exhaustive
+alternatives) behind a declarative spec -> session -> artifact facade; new
+callers should go through that instead of invoking ``run_ga`` directly.
 """
 from __future__ import annotations
 
 import random
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Hashable, List, Sequence, Tuple
+from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 
-from repro.core.fusion import FusionState
 from repro.core.graph import LayerGraph
+from repro.core.problem import FusionProblem, SearchProblem
 
 
 @dataclass(frozen=True)
@@ -59,7 +66,14 @@ class GAConfig:
 
 @dataclass
 class GAResult:
-    best_state: FusionState
+    """Outcome of one search run (any backend, any genome).
+
+    ``best_state`` is whatever genome type the searched problem uses — a
+    :class:`repro.core.fusion.FusionState` for the paper's problem, a
+    :class:`repro.costmodel.tpu_model.TpuSchedule` for the TPU retarget.
+    """
+
+    best_state: object
     best_fitness: float
     history: List[float] = field(default_factory=list)   # best fitness per gen
     evaluations: int = 0              # unique genomes scored
@@ -68,6 +82,12 @@ class GAResult:
     @property
     def generations_run(self) -> int:
         return len(self.history)
+
+
+# Observer called once per generation with (generation index, best fitness so
+# far, unique evaluations, offspring evaluated); returning True stops the
+# search after that generation (budget/patience hooks in repro.search).
+GAObserver = Callable[[int, float, int, int], Optional[bool]]
 
 
 def select_pool(entries: Sequence[Tuple[float, object]], top_n: int,
@@ -95,61 +115,53 @@ def select_pool(entries: Sequence[Tuple[float, object]], top_n: int,
     return top + rest[:random_survivors]
 
 
-def run_ga(graph: LayerGraph, evaluator, config: GAConfig = GAConfig()
-           ) -> GAResult:
-    """Run Alg. 1.  ``evaluator.fitness(state, objective) -> float`` with 0
-    meaning invalid."""
+def run_ga_problem(problem: SearchProblem, config: GAConfig = GAConfig(),
+                   observer: Optional[GAObserver] = None) -> GAResult:
+    """Run Alg. 1 against any :class:`SearchProblem`.
+
+    ``observer`` (if given) is called after every generation and may return
+    True to stop early — this is how ``repro.search`` sessions implement
+    evaluation budgets and no-improvement patience without the loop knowing
+    about either.
+    """
     rng = random.Random(config.seed)
-    cg = graph.compiled()
-    fit_cache: Dict[int, float] = {}
-    batch = getattr(evaluator, "fitness_batch", None)
+    fit_cache: Dict[Hashable, float] = {}
     offspring_evaluated = 0
 
-    def score(states: List[FusionState]) -> List[float]:
-        """Fitness per state, via the run-level genome cache; novel genomes
-        are scored in one batch so the evaluator can dedupe group costs."""
-        fresh: Dict[int, FusionState] = {}
+    def score(states: List) -> List[float]:
+        """Fitness per genome, via the run-level cache; novel genomes are
+        scored in one batch so the evaluator can dedupe shared structure."""
+        fresh: Dict[Hashable, object] = {}
         for s in states:
-            k = s.key()
+            k = problem.key(s)
             if k not in fit_cache and k not in fresh:
                 fresh[k] = s
         if fresh:
             todo = list(fresh.values())
-            if batch is not None:
-                fits = batch(todo, config.objective)
-            else:
-                fits = [evaluator.fitness(s, config.objective) for s in todo]
+            fits = problem.fitness_batch(todo)
             for s, f in zip(todo, fits):
-                fit_cache[s.key()] = f
-        return [fit_cache[s.key()] for s in states]
+                fit_cache[problem.key(s)] = f
+        return [fit_cache[problem.key(s)] for s in states]
 
-    def crossover(a: FusionState, b: FusionState) -> FusionState:
-        """Uniform crossover on the fused-edge genome (beyond-paper)."""
-        mask = 0
-        for i in range(cg.m):
-            src = a.mask if rng.random() < 0.5 else b.mask
-            mask |= src & (1 << i)
-        return FusionState.from_mask(graph, mask)
-
-    init = FusionState.layerwise(graph)
-    pool: List[Tuple[float, FusionState]] = list(zip(score([init]), [init]))
+    init = problem.initial()
+    pool: List[Tuple[float, object]] = list(zip(score([init]), [init]))
     history: List[float] = []
 
-    for _gen in range(config.generations):
-        offspring: List[FusionState] = []
+    for gen in range(config.generations):
+        offspring: List = []
         for _ in range(config.mutations_per_gen):
             parent = pool[rng.randrange(len(pool))][1]
             if config.crossover_rate and rng.random() < config.crossover_rate \
                     and len(pool) > 1:
                 other = pool[rng.randrange(len(pool))][1]
-                parent = crossover(parent, other)
-            offspring.append(parent.mutate(rng))
+                parent = problem.crossover(parent, other, rng)
+            offspring.append(problem.mutate(parent, rng))
         fits = score(offspring)
         offspring_evaluated += len(offspring)
 
         pool = select_pool(pool + list(zip(fits, offspring)),
                            config.top_n, config.random_survivors, rng,
-                           key=lambda s: s.key())
+                           key=problem.key)
         # keep the pool topped up to the paper's full P with fresh mutants of
         # survivors (duplicates allowed; next generation dedupes); parents are
         # picked by size-2 tournament over the rank-sorted survivor list, which
@@ -160,16 +172,27 @@ def run_ga(graph: LayerGraph, evaluator, config: GAConfig = GAConfig()
             topup = []
             for _ in range(need):
                 i, j = rng.randrange(n_surv), rng.randrange(n_surv)
-                topup.append(pool[min(i, j)][1].mutate(rng))
+                topup.append(problem.mutate(pool[min(i, j)][1], rng))
             tfits = score(topup)
             offspring_evaluated += len(topup)
             pool.extend(zip(tfits, topup))
         history.append(max(f for f, _ in pool))
+        if observer is not None and observer(gen, history[-1], len(fit_cache),
+                                             offspring_evaluated):
+            break
 
     best_f, best_s = max(pool, key=lambda fs: fs[0])
     # batch scoring may re-associate float sums (~1 ulp); report the winner's
     # exact single-state fitness so results are comparable across engines
-    best_f = evaluator.fitness(best_s, config.objective)
+    best_f = problem.fitness(best_s)
     return GAResult(best_state=best_s, best_fitness=best_f,
                     history=history, evaluations=len(fit_cache),
                     offspring_evaluated=offspring_evaluated)
+
+
+def run_ga(graph: LayerGraph, evaluator, config: GAConfig = GAConfig(),
+           observer: Optional[GAObserver] = None) -> GAResult:
+    """Run Alg. 1 on the paper's fusion problem.  ``evaluator.fitness(state,
+    objective) -> float`` with 0 meaning invalid."""
+    problem = FusionProblem(graph, evaluator, config.objective)
+    return run_ga_problem(problem, config, observer)

@@ -1,0 +1,133 @@
+"""Search-problem protocol: what a genome space must provide to be searched.
+
+The paper's search procedure (Alg. 1) is independent of *what* is being
+searched: it needs an initial genome, a mutation operator, and a fitness
+function with 0 meaning invalid.  This module pins that contract down as
+:class:`SearchProblem` so every search backend in ``repro.search.backends``
+(GA, random, hill-climb, exhaustive) runs against fusion states and TPU
+schedules — or any future genome — through one interface instead of each
+genome growing its own copy of the selection loop.
+
+:class:`FusionProblem` is the paper's problem: edge-bitmask
+:class:`repro.core.fusion.FusionState` genomes scored by a memoizing
+:class:`repro.costmodel.evaluator.Evaluator`.  Its method bodies make
+exactly the RNG calls the pre-refactor ``run_ga`` made, so fixed-seed
+results are bit-for-bit unchanged (pinned by ``tests/test_search_api.py``).
+"""
+from __future__ import annotations
+
+import random
+from typing import Hashable, Iterable, Iterator, List, Optional, Sequence
+
+from repro.core.fusion import FusionState
+from repro.core.graph import LayerGraph
+
+
+class SearchProblem:
+    """Genome-space contract consumed by every search backend.
+
+    Subclasses must implement :meth:`initial`, :meth:`mutate`,
+    :meth:`fitness`, and :meth:`key`; the remaining methods have generic
+    (sometimes unavailable) defaults that specific problems may override
+    or extend.
+    """
+
+    #: short name used in artifacts/reports
+    name: str = "problem"
+
+    # ---- required surface -----------------------------------------------------
+    def initial(self):
+        """The search's starting genome (the paper's layerwise schedule)."""
+        raise NotImplementedError
+
+    def mutate(self, genome, rng: random.Random):
+        """One random unit mutation (paper Alg. 1 line 4)."""
+        raise NotImplementedError
+
+    def fitness(self, genome) -> float:
+        """``baseline_metric / genome_metric``; 0.0 means invalid."""
+        raise NotImplementedError
+
+    def key(self, genome) -> Hashable:
+        """Cheap hashable genome identity for fitness caches."""
+        raise NotImplementedError
+
+    # ---- optional surface -----------------------------------------------------
+    def fitness_batch(self, genomes: Sequence) -> List[float]:
+        """Score a whole offspring generation; override when the evaluator
+        can dedupe shared substructure (see ``Evaluator.fitness_batch``)."""
+        return [self.fitness(g) for g in genomes]
+
+    def crossover(self, a, b, rng: random.Random):
+        """Uniform crossover (beyond-paper); default: no recombination."""
+        return a
+
+    def neighbors(self, genome) -> Iterable:
+        """All one-mutation neighbors (hill-climb moves).  Optional."""
+        raise NotImplementedError(f"{self.name} does not enumerate neighbors")
+
+    def enumerate(self) -> Iterator:
+        """Every genome in the space (exhaustive search).  Optional."""
+        raise NotImplementedError(f"{self.name} is not enumerable")
+
+    def space_size(self) -> Optional[int]:
+        """Number of genomes in the space, or None if unbounded/unknown."""
+        return None
+
+
+class FusionProblem(SearchProblem):
+    """The paper's interlayer-pipelining problem (§III): fusion-state genomes
+    over ``graph``, scored by ``evaluator`` on ``objective``."""
+
+    name = "fusion"
+
+    def __init__(self, graph: LayerGraph, evaluator, objective: str = "edp"):
+        self.graph = graph
+        self.evaluator = evaluator
+        self.objective = objective
+        self.cg = graph.compiled()
+        self._batch = getattr(evaluator, "fitness_batch", None)
+
+    def initial(self) -> FusionState:
+        return FusionState.layerwise(self.graph)
+
+    def mutate(self, genome: FusionState, rng: random.Random) -> FusionState:
+        return genome.mutate(rng)
+
+    def fitness(self, genome: FusionState) -> float:
+        return self.evaluator.fitness(genome, self.objective)
+
+    def fitness_batch(self, genomes: Sequence[FusionState]) -> List[float]:
+        if self._batch is not None:
+            return self._batch(genomes, self.objective)
+        return [self.fitness(g) for g in genomes]
+
+    def key(self, genome: FusionState) -> int:
+        return genome.key()
+
+    def crossover(self, a: FusionState, b: FusionState,
+                  rng: random.Random) -> FusionState:
+        """Uniform crossover on the fused-edge genome (beyond-paper)."""
+        mask = 0
+        for i in range(self.cg.m):
+            src = a.mask if rng.random() < 0.5 else b.mask
+            mask |= src & (1 << i)
+        return FusionState.from_mask(self.graph, mask)
+
+    def neighbors(self, genome: FusionState) -> Iterator[FusionState]:
+        for i in range(self.cg.m):
+            if (genome.mask >> i) & 1:
+                yield genome._separate_idx(i)
+            else:
+                yield genome._combine_idx(i)
+
+    def random_genome(self, rng: random.Random) -> FusionState:
+        return FusionState.from_mask(self.graph, rng.getrandbits(self.cg.m)
+                                     if self.cg.m else 0)
+
+    def enumerate(self) -> Iterator[FusionState]:
+        for mask in range(1 << self.cg.m):
+            yield FusionState.from_mask(self.graph, mask)
+
+    def space_size(self) -> int:
+        return 1 << self.cg.m

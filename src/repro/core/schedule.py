@@ -3,16 +3,22 @@
 This is the paper's end-to-end flow (§III-IV): layerwise baseline -> GA search
 over fusion states -> best multi-layer schedule, reported as improvement
 ratios over the baseline.
+
+:func:`optimize` is now a thin compatibility shim over ``repro.search``
+(spec -> session -> artifact); it keeps the pre-facade signature and
+:class:`ScheduleResult` return type for existing callers.  New code should
+use :func:`repro.search.search` / :class:`repro.search.SearchSession`, which
+also provide durable JSON artifacts and non-GA backends.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict
 
 from typing import TYPE_CHECKING
 
 from repro.core.fusion import FusionState
-from repro.core.ga import GAConfig, GAResult, run_ga
+from repro.core.ga import GAConfig, GAResult
 from repro.core.graph import LayerGraph
 
 if TYPE_CHECKING:  # lazy at runtime: costmodel imports core.fusion
@@ -21,14 +27,13 @@ if TYPE_CHECKING:  # lazy at runtime: costmodel imports core.fusion
     from repro.costmodel.evaluator import ScheduleCost
 
 
-@dataclass
-class ScheduleResult:
-    workload: str
-    accelerator: str
-    baseline: ScheduleCost              # layerwise
-    best: ScheduleCost                  # GA-optimized
-    best_state: FusionState
-    ga: GAResult
+class ImprovementRatios:
+    """Baseline/best improvement ratios (the paper's reporting unit), shared
+    by :class:`ScheduleResult` and ``repro.search.ScheduleArtifact`` — both
+    expose ``baseline``/``best`` :class:`ScheduleCost` attributes."""
+
+    baseline: ScheduleCost
+    best: ScheduleCost
 
     @property
     def energy_improvement(self) -> float:
@@ -48,6 +53,16 @@ class ScheduleResult:
         n = self.best.dram_read_words + self.best.dram_write_words
         return b / max(n, 1)
 
+
+@dataclass
+class ScheduleResult(ImprovementRatios):
+    workload: str
+    accelerator: str
+    baseline: ScheduleCost              # layerwise
+    best: ScheduleCost                  # GA-optimized
+    best_state: FusionState
+    ga: GAResult
+
     def summary(self) -> Dict[str, float]:
         return {
             "workload": self.workload,
@@ -66,13 +81,13 @@ class ScheduleResult:
 def optimize(graph: LayerGraph, acc: "Accelerator",
              config: GAConfig = GAConfig(),
              em: "EnergyModel" = None) -> ScheduleResult:
-    from repro.costmodel.energy import DEFAULT_ENERGY
-    from repro.costmodel.evaluator import Evaluator
-    ev = Evaluator(graph, acc, em or DEFAULT_ENERGY)
-    result = run_ga(graph, ev, config)
-    best_cost = ev.evaluate(result.best_state)
-    assert best_cost is not None, "GA returned an invalid best state"
-    return ScheduleResult(
-        workload=graph.name, accelerator=acc.name,
-        baseline=ev.layerwise(), best=best_cost,
-        best_state=result.best_state, ga=result)
+    """Compatibility shim: run the GA backend through a ``repro.search``
+    session (fixed-seed results are bit-identical to the pre-facade path)."""
+    from repro.search.session import SearchSession
+    from repro.search.spec import SearchSpec
+    spec = SearchSpec(workload=graph.name, accelerator=acc.name,
+                      objective=config.objective, backend="ga",
+                      backend_config={"ga_config": config}, seed=config.seed)
+    session = SearchSession(spec, graph=graph, accelerator=acc, em=em)
+    session.run()
+    return session.schedule_result()

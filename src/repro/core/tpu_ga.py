@@ -1,26 +1,27 @@
 """The paper's GA re-targeted at TPU training schedules (beyond-paper).
 
-Same Alg. 1 skeleton (population, combine/separate-style mutations, fitness
-= baseline/new, Top-N + random survivors), but the genome is a
+Same Alg. 1 skeleton, but the genome is a
 :class:`repro.costmodel.tpu_model.TpuSchedule` — remat policy (the TPU
 analogue of the paper's fuse/split decision: *which activations stay
 "on-chip"/cheap vs round-trip HBM*), microbatch count (receptive-field-style
-working-set sizing) and gradient compression (cross-pod DRAM<->DCI traffic).
+working-set sizing), gradient compression (cross-pod DRAM<->DCI traffic),
+and sharding mode.
 
-Fitness comes from the analytical TPU cost model; candidates whose HBM
-residency exceeds capacity are invalid — the same capacity-check-discard the
-paper applies to over-buffer fusion states.  The dry-run validates the
-winner by re-lowering (EXPERIMENTS.md §Perf).
+This module is now a thin compatibility shim: the genome lives in
+``repro.search.tpu.TpuScheduleProblem`` and the selection loop is the shared
+``repro.core.ga.run_ga_problem`` (this file's own copy of the loop was
+deleted when the search facade landed).  New callers should use
+``repro.search.tpu.search_tpu_schedule``, which also accepts the ``random``
+/ ``hill_climb`` / ``exhaustive`` backends.
 """
 from __future__ import annotations
 
-import random
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.ga import GAConfig, select_pool
-from repro.costmodel.tpu_model import TpuCost, TpuSchedule, estimate
+from repro.core.ga import GAConfig
+from repro.costmodel.tpu_model import TpuCost, TpuSchedule
 from repro.roofline.analysis import HW
 
 
@@ -49,53 +50,9 @@ def optimize_tpu_schedule(cfg: ModelConfig, shape: ShapeConfig, *,
                           ga: GAConfig = GAConfig.fast(generations=30),
                           hbm_capacity: Optional[float] = None
                           ) -> TpuGAResult:
-    """Search remat/microbatch/compression for one (arch x shape) cell."""
-    hbm_capacity = hbm_capacity or hw.hbm_bytes
-    rng = random.Random(ga.seed)
-    cache: Dict[TpuSchedule, Optional[TpuCost]] = {}
-
-    def cost_of(s: TpuSchedule) -> Optional[TpuCost]:
-        if s not in cache:
-            if s.sharding == "fsdp" and cfg.n_experts:
-                cache[s] = None      # EP needs the model axis (unsupported)
-            else:
-                c = estimate(cfg, shape, s, chips=chips, data_par=data_par,
-                             model_par=model_par, hw=hw)
-                cache[s] = None if c.hbm_resident_bytes > hbm_capacity else c
-        return cache[s]
-
-    baseline = TpuSchedule()                      # paper-faithful start
-    base_cost = estimate(cfg, shape, baseline, chips=chips,
-                         data_par=data_par, model_par=model_par, hw=hw)
-
-    def metric(c: TpuCost) -> float:
-        return c.edp if objective == "edp" else c.step_s
-
-    def fitness(s: TpuSchedule) -> float:
-        c = cost_of(s)
-        return 0.0 if c is None else metric(base_cost) / metric(c)
-
-    def mutant_of(parent: TpuSchedule) -> TpuSchedule:
-        opts = parent.mutate_options()
-        return opts[rng.randrange(len(opts))]
-
-    pool: List[Tuple[float, TpuSchedule]] = [(fitness(baseline), baseline)]
-    history: List[float] = []
-    for _ in range(ga.generations):
-        children = [mutant_of(pool[rng.randrange(len(pool))][1])
-                    for _ in range(ga.mutations_per_gen)]
-        entries = pool + [(fitness(c), c) for c in children]
-        pool = select_pool(entries, ga.top_n, ga.random_survivors, rng)
-        # honor the paper's full population: top the pool back up with fresh
-        # mutants of survivors (same fix as repro.core.ga.run_ga)
-        while len(pool) < ga.population:
-            c = mutant_of(pool[rng.randrange(len(pool))][1])
-            pool.append((fitness(c), c))
-        history.append(max(f for f, _ in pool))
-
-    best_f, best = max(pool, key=lambda fs: fs[0])
-    best_cost = cost_of(best)
-    assert best_cost is not None
-    return TpuGAResult(best=best, best_cost=best_cost, baseline=baseline,
-                       baseline_cost=base_cost, history=history,
-                       evaluations=len(cache))
+    """Compatibility shim over :func:`repro.search.tpu.search_tpu_schedule`
+    (GA backend)."""
+    from repro.search.tpu import search_tpu_schedule
+    return search_tpu_schedule(
+        cfg, shape, chips=chips, data_par=data_par, model_par=model_par,
+        hw=hw, objective=objective, ga=ga, hbm_capacity=hbm_capacity)

@@ -41,6 +41,11 @@ from repro.costmodel.mapper import LayerCost, map_layer
 
 _MISSING = object()
 
+#: objectives the evaluator scores natively (ScheduleCost.metric and the
+#: batched fitness hot path); repro.search registers exactly these as
+#: built-ins and routes anything else through the generic evaluate() path
+NATIVE_OBJECTIVES = ("edp", "energy", "cycles", "dram")
+
 
 @dataclass(frozen=True)
 class ScheduleCost:

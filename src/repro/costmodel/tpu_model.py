@@ -31,6 +31,13 @@ _ACT_SAVE_FACTOR = {"none": 14.0, "selective": 6.0, "full": 1.0}
 # extra forward recompute in the backward pass, fraction of fwd FLOPs
 _RECOMPUTE = {"none": 0.0, "selective": 0.35, "full": 1.0}
 
+# the full genome option sets — single source of truth for mutate_options
+# AND the search problem's enumerate/space_size/random sampling
+# (repro.search.tpu); extending one extends both
+REMAT_OPTIONS = tuple(_RECOMPUTE)
+MICROBATCH_OPTIONS = (1, 2, 4, 8, 16)
+SHARDING_OPTIONS = ("tp", "fsdp")     # tp (Megatron) | fsdp (ZeRO-3 + SP)
+
 
 @dataclass(frozen=True)
 class TpuSchedule:
@@ -38,21 +45,21 @@ class TpuSchedule:
     remat: str = "none"               # per-run policy (none|selective|full)
     microbatches: int = 1
     grad_compression: bool = False
-    sharding: str = "tp"              # tp (Megatron) | fsdp (ZeRO-3 + SP)
+    sharding: str = "tp"
 
     def mutate_options(self):
         return (
             [TpuSchedule(r, self.microbatches, self.grad_compression,
                          self.sharding)
-             for r in _RECOMPUTE if r != self.remat]
+             for r in REMAT_OPTIONS if r != self.remat]
             + [TpuSchedule(self.remat, m, self.grad_compression,
                            self.sharding)
-               for m in (1, 2, 4, 8, 16) if m != self.microbatches]
+               for m in MICROBATCH_OPTIONS if m != self.microbatches]
             + [TpuSchedule(self.remat, self.microbatches,
                            not self.grad_compression, self.sharding)]
             + [TpuSchedule(self.remat, self.microbatches,
-                           self.grad_compression,
-                           "fsdp" if self.sharding == "tp" else "tp")]
+                           self.grad_compression, s)
+               for s in SHARDING_OPTIONS if s != self.sharding]
         )
 
 

@@ -1,0 +1,57 @@
+"""``repro.search`` — one pluggable search API over all workloads,
+accelerators, and backends.
+
+The paper's contribution is a *search procedure* (GA over fusion states,
+§III); this package is its single entry point:
+
+    from repro.search import search
+    artifact = search("mobilenet_v3", "simba", backend="ga")
+    print(artifact.summary())          # energy_x / edp_x / groups / ...
+    artifact.save("schedule.json")     # durable, diffable, re-loadable
+
+or, declaratively (what the CLI and a scheduler service speak):
+
+    spec = SearchSpec(workload="resnet50", accelerator="eyeriss@act+64",
+                      backend="hill_climb", seed=1)
+    artifact = SearchSession(spec).run(progress=print)
+
+Layers:
+
+* **registries** — string-keyed workloads / accelerators / objectives /
+  backends with ``@register_*`` decorators (one function = one new entry);
+* **backends** — strategies over the :class:`repro.core.problem.
+  SearchProblem` protocol: ``ga`` (paper Alg. 1, reference), ``random``,
+  ``hill_climb``, ``exhaustive``;
+* **spec -> session -> artifact** — a frozen :class:`SearchSpec`, a
+  :class:`SearchSession` driving the backend with progress/early-stop
+  hooks, and a JSON-round-trippable :class:`ScheduleArtifact` carrying the
+  winning genome + graph fingerprint + costs + history;
+* **tpu** — the TPU-retargeted problem (``repro.search.tpu``) runs through
+  the same backends.
+
+CLI: ``python -m repro search --workload mobilenet_v3 --accel simba
+--backend ga --out artifact.json`` then ``python -m repro report
+artifact.json``.
+"""
+from repro.search.artifact import (FingerprintMismatch, ScheduleArtifact,
+                                   graph_fingerprint)
+from repro.search.backends import (BackendError, ExhaustiveBackend,
+                                   GABackend, HillClimbBackend,
+                                   RandomBackend, SearchBackend)
+from repro.search.registry import (ACCELERATORS, BACKENDS, OBJECTIVES,
+                                   WORKLOADS, Registry, RegistryError,
+                                   build_accelerator, build_workload,
+                                   register_accelerator, register_backend,
+                                   register_objective, register_workload)
+from repro.search.session import Progress, SearchSession, search
+from repro.search.spec import SearchSpec
+
+__all__ = [
+    "ACCELERATORS", "BACKENDS", "OBJECTIVES", "WORKLOADS",
+    "BackendError", "ExhaustiveBackend", "FingerprintMismatch", "GABackend",
+    "HillClimbBackend", "Progress", "RandomBackend", "Registry",
+    "RegistryError", "ScheduleArtifact", "SearchBackend", "SearchSession",
+    "SearchSpec", "build_accelerator", "build_workload", "graph_fingerprint",
+    "register_accelerator", "register_backend", "register_objective",
+    "register_workload", "search",
+]

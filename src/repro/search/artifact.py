@@ -1,0 +1,199 @@
+"""Durable search results: the winning genome + costs, JSON-round-trippable.
+
+A :class:`ScheduleArtifact` is what a search session produces and what a
+scheduler service would store/serve: the spec that ran, the winning
+edge-bitmask genome, a structural fingerprint of the graph it was searched
+on, baseline/best costs, and the convergence history.  Reports and
+improvement ratios come straight from the artifact — no re-search — and
+re-binding the genome onto a rebuilt graph is refused unless the graph's
+fingerprint matches (a stale genome on a changed graph is silently wrong,
+so it is an error instead).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from repro.core.fusion import FusionState
+from repro.core.graph import LayerGraph
+from repro.core.schedule import ImprovementRatios
+from repro.costmodel.evaluator import ScheduleCost
+
+from repro.search.spec import SearchSpec
+
+ARTIFACT_VERSION = 1
+
+
+class FingerprintMismatch(ValueError):
+    """The artifact's genome belongs to a structurally different graph."""
+
+
+def graph_fingerprint(graph: LayerGraph) -> str:
+    """Stable hash of the graph *structure* the genome indexes: layer
+    geometry in insertion order plus the deduped edge list (the bit order of
+    :class:`repro.core.graph.CompiledGraph`)."""
+    cg = graph.compiled()
+    payload = {
+        "name": graph.name,
+        "layers": [dataclasses.astuple(l) for l in cg.layers],
+        "edges": list(cg.edge_pairs),
+    }
+    blob = json.dumps(payload, sort_keys=True, default=list)
+    return "sha256:" + hashlib.sha256(blob.encode()).hexdigest()
+
+
+def _cost_to_dict(cost: ScheduleCost) -> Dict[str, Any]:
+    return dataclasses.asdict(cost)
+
+
+def _cost_from_dict(d: Dict[str, Any]) -> ScheduleCost:
+    return ScheduleCost(**d)
+
+
+@dataclass
+class ScheduleArtifact(ImprovementRatios):
+    """A finished search, storable / diffable / re-loadable without
+    re-searching."""
+
+    spec: SearchSpec
+    graph_fingerprint: str
+    n_edges: int
+    genome_mask: int
+    best_fitness: float
+    baseline: ScheduleCost
+    best: ScheduleCost
+    fused_edges: List[List[str]] = field(default_factory=list)
+    history: List[float] = field(default_factory=list)
+    evaluations: int = 0
+    offspring_evaluated: int = 0
+    wall_s: float = 0.0
+    backend_stats: Dict[str, Any] = field(default_factory=dict)
+    created_unix: int = 0
+    version: int = ARTIFACT_VERSION
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "workload": self.spec.workload,
+            "accelerator": self.spec.accelerator,
+            "backend": self.spec.backend,
+            "seed": self.spec.seed,
+            "energy_x": round(self.energy_improvement, 3),
+            "edp_x": round(self.edp_improvement, 3),
+            "cycles_x": round(self.cycles_improvement, 3),
+            "dram_x": round(self.dram_improvement, 3),
+            "groups": self.best.n_groups,
+            "act_dram_writes_base": self.baseline.act_write_events,
+            "act_dram_writes_best": self.best.act_write_events,
+            "best_fitness": self.best_fitness,
+            "evaluations": self.evaluations,
+        }
+
+    # ---- genome re-binding -----------------------------------------------------
+    def state(self, graph: LayerGraph) -> FusionState:
+        """Re-bind the winning genome onto ``graph``; refuses structurally
+        different graphs (the bitmask would index the wrong edges)."""
+        fp = graph_fingerprint(graph)
+        if fp != self.graph_fingerprint:
+            raise FingerprintMismatch(
+                f"artifact genome was searched on graph "
+                f"{self.graph_fingerprint} but {graph.name!r} hashes to {fp}; "
+                f"rebuild the workload exactly as specified "
+                f"({self.spec.workload!r}, kwargs={self.spec.workload_kwargs})")
+        return FusionState.from_mask(graph, self.genome_mask)
+
+    def rebuild_graph(self) -> LayerGraph:
+        """Rebuild the spec's workload from the registry."""
+        from repro.search.registry import build_workload
+        return build_workload(self.spec.workload, **self.spec.workload_kwargs)
+
+    def rebuild_state(self) -> FusionState:
+        return self.state(self.rebuild_graph())
+
+    # ---- serialization ----------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "version": self.version,
+            "created_unix": self.created_unix,
+            "spec": self.spec.to_dict(),
+            "graph_fingerprint": self.graph_fingerprint,
+            "n_edges": self.n_edges,
+            "genome_mask": hex(self.genome_mask),
+            "fused_edges": self.fused_edges,
+            "best_fitness": self.best_fitness,
+            "baseline": _cost_to_dict(self.baseline),
+            "best": _cost_to_dict(self.best),
+            "history": self.history,
+            "evaluations": self.evaluations,
+            "offspring_evaluated": self.offspring_evaluated,
+            "wall_s": self.wall_s,
+            "backend_stats": self.backend_stats,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ScheduleArtifact":
+        if d.get("version") != ARTIFACT_VERSION:
+            raise ValueError(
+                f"unsupported artifact version {d.get('version')!r} "
+                f"(this build reads version {ARTIFACT_VERSION})")
+        return cls(
+            spec=SearchSpec.from_dict(d["spec"]),
+            graph_fingerprint=d["graph_fingerprint"],
+            n_edges=d["n_edges"],
+            genome_mask=int(d["genome_mask"], 16),
+            best_fitness=d["best_fitness"],
+            baseline=_cost_from_dict(d["baseline"]),
+            best=_cost_from_dict(d["best"]),
+            fused_edges=[list(e) for e in d.get("fused_edges", [])],
+            history=d.get("history", []),
+            evaluations=d.get("evaluations", 0),
+            offspring_evaluated=d.get("offspring_evaluated", 0),
+            wall_s=d.get("wall_s", 0.0),
+            backend_stats=d.get("backend_stats", {}),
+            created_unix=d.get("created_unix", 0),
+        )
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2, sort_keys=True) + "\n"
+
+    @classmethod
+    def from_json(cls, text: str) -> "ScheduleArtifact":
+        return cls.from_dict(json.loads(text))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @classmethod
+    def load(cls, path: str) -> "ScheduleArtifact":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+
+def make_artifact(spec: SearchSpec, graph: LayerGraph, result,
+                  baseline: ScheduleCost, best: ScheduleCost,
+                  wall_s: float = 0.0,
+                  backend_stats: Optional[Dict[str, Any]] = None
+                  ) -> ScheduleArtifact:
+    """Package a finished backend run (``result``: GAResult over fusion
+    genomes) into a durable artifact."""
+    state: FusionState = result.best_state
+    return ScheduleArtifact(
+        spec=spec,
+        graph_fingerprint=graph_fingerprint(graph),
+        n_edges=graph.compiled().m,
+        genome_mask=state.mask,
+        fused_edges=sorted([u, v] for u, v in state.fused),
+        best_fitness=result.best_fitness,
+        baseline=baseline,
+        best=best,
+        history=list(result.history),
+        evaluations=result.evaluations,
+        offspring_evaluated=result.offspring_evaluated,
+        wall_s=wall_s,
+        backend_stats=dict(backend_stats or {}),
+        created_unix=int(time.time()),
+    )

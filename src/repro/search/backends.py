@@ -1,0 +1,268 @@
+"""Pluggable search strategies over a :class:`~repro.core.problem.SearchProblem`.
+
+Every backend implements one method —
+
+    run(problem, seed=..., observer=..., **config) -> GAResult
+
+— where ``observer(step, best_fitness, evaluations, offspring_evaluated)``
+is called as the search progresses and may return True to stop early (the
+session layers budgets/patience on top of it).  All backends return the
+same :class:`repro.core.ga.GAResult`, so sessions, artifacts, and reports
+are strategy-agnostic.
+
+Built-ins:
+
+* ``ga``         — the paper's Alg. 1 (reference implementation:
+                   :func:`repro.core.ga.run_ga_problem`);
+* ``random``     — uniform random genomes (or random walks when the problem
+                   cannot sample uniformly), the paper's natural lower bound;
+* ``hill_climb`` — greedy best-improvement over one-mutation (combine /
+                   separate) neighborhoods;
+* ``exhaustive`` — enumerate the whole space, up to a guard ``limit``
+                   (default 2^16 states, the paper's §III-A sizing of
+                   VGG-16's space over conv layers; this IR also genomes
+                   pool/input edges — vgg16 here has 21 edges, so pass
+                   ``limit`` explicitly to exhaust it).
+
+New strategies subclass :class:`SearchBackend` and register with
+``@register_backend("name")``.
+"""
+from __future__ import annotations
+
+import itertools
+import random
+from typing import Callable, List, Optional
+
+from repro.core.ga import GAConfig, GAResult, run_ga_problem
+from repro.core.problem import SearchProblem
+
+from repro.search.registry import register_backend
+
+Observer = Callable[[int, float, int, int], Optional[bool]]
+
+#: default exhaustive-search ceiling, the paper's §III-A sizing of VGG-16's
+#: space (2^16 over conv layers; overridable per-run via config limit)
+EXHAUSTIVE_LIMIT = 1 << 16
+
+#: batch size for backends that score genomes through ``fitness_batch``
+_CHUNK = 128
+
+
+class BackendError(ValueError):
+    """A backend cannot run with the given problem/config."""
+
+
+class SearchBackend:
+    """Base class for search strategies; subclasses set ``name`` and
+    implement :meth:`run`."""
+
+    name = "backend"
+
+    def run(self, problem: SearchProblem, *, seed: int = 0,
+            observer: Optional[Observer] = None, **config) -> GAResult:
+        raise NotImplementedError
+
+    @staticmethod
+    def _reject_unknown(config, *known):
+        unknown = set(config) - set(known)
+        if unknown:
+            raise BackendError(
+                f"unknown backend config keys: {sorted(unknown)}; "
+                f"valid: {sorted(known)}")
+
+
+@register_backend("ga")
+class GABackend(SearchBackend):
+    """Paper Alg. 1 (§III-B) — the reference backend.
+
+    Config keys mirror :class:`GAConfig` (``population``, ``top_n``,
+    ``generations``, ``mutations_per_gen``, ``random_survivors``,
+    ``crossover_rate``) plus ``preset`` (``"paper"`` | ``"fast"``); a
+    prebuilt ``GAConfig`` can be passed as ``ga_config``.  The objective
+    comes from the spec/problem, not from here.
+    """
+
+    name = "ga"
+
+    @staticmethod
+    def make_config(seed: int = 0, **config) -> GAConfig:
+        if "objective" in config:
+            raise BackendError(
+                "set the objective via SearchSpec.objective "
+                "(CLI: --objective), not backend_config")
+        cfg = config.pop("ga_config", None)
+        if cfg is not None:
+            if config:
+                raise BackendError(
+                    "ga_config is exclusive with other config keys "
+                    f"(got {sorted(config)})")
+            if isinstance(cfg, GAConfig):
+                return cfg
+            if not isinstance(cfg, dict):
+                raise BackendError(
+                    f"ga_config must be a GAConfig or a dict of its "
+                    f"fields, got {type(cfg).__name__}")
+            # a JSON-round-tripped spec carries the config as a plain dict;
+            # its own seed (if any) wins, like a live GAConfig's does
+            try:
+                return GAConfig(**{"seed": seed, **cfg})
+            except TypeError as e:
+                raise BackendError(f"bad ga_config: {e}") from None
+        preset = config.pop("preset", "paper")
+        maker = {"paper": GAConfig.paper, "fast": GAConfig.fast}.get(preset)
+        if maker is None:
+            raise BackendError(
+                f"unknown ga preset {preset!r}; valid: fast, paper")
+        try:
+            return maker(seed=seed, **config)
+        except TypeError as e:
+            raise BackendError(f"bad ga config: {e}") from None
+
+    def run(self, problem: SearchProblem, *, seed: int = 0,
+            observer: Optional[Observer] = None, **config) -> GAResult:
+        return run_ga_problem(problem, self.make_config(seed, **config),
+                              observer)
+
+
+@register_backend("random")
+class RandomBackend(SearchBackend):
+    """Random sampling (``evaluations`` genomes, default 1000).
+
+    The initial genome is always included, so the result is never worse
+    than the layerwise baseline.  ``mode="walk"`` (default) samples random
+    walks of ``walk_len`` mutations (default 8) from the initial genome —
+    the meaningful no-selection baseline for large fusion spaces, where
+    ``mode="uniform"`` (uniform over the whole space, when the problem can
+    sample it) almost surely draws invalid states.
+    """
+
+    name = "random"
+
+    def run(self, problem: SearchProblem, *, seed: int = 0,
+            observer: Optional[Observer] = None, **config) -> GAResult:
+        self._reject_unknown(config, "evaluations", "walk_len", "mode")
+        evaluations = int(config.get("evaluations", 1000))
+        walk_len = int(config.get("walk_len", 8))
+        mode = config.get("mode", "walk")
+        if mode not in ("walk", "uniform"):
+            raise BackendError(f"unknown random mode {mode!r}; "
+                               f"valid: walk, uniform")
+        rng = random.Random(seed)
+        sampler = getattr(problem, "random_genome", None)
+        if mode == "uniform" and sampler is None:
+            raise BackendError(
+                f"problem {problem.name!r} cannot sample uniformly; "
+                f"use mode='walk'")
+
+        def sample():
+            if mode == "uniform":
+                return sampler(rng)
+            g = problem.initial()
+            for _ in range(walk_len):
+                g = problem.mutate(g, rng)
+            return g
+
+        best, best_f = problem.initial(), problem.fitness(problem.initial())
+        seen = {problem.key(best)}
+        history: List[float] = [best_f]
+        done, step = 1, 0
+        while done < evaluations:
+            chunk = [sample() for _ in range(min(_CHUNK, evaluations - done))]
+            fits = problem.fitness_batch(chunk)
+            done += len(chunk)
+            for g, f in zip(chunk, fits):
+                seen.add(problem.key(g))
+                if f > best_f:
+                    best, best_f = g, f
+            history.append(best_f)
+            step += 1
+            if observer is not None and observer(step, best_f, len(seen),
+                                                 done):
+                break
+        return GAResult(best_state=best, best_fitness=best_f, history=history,
+                        evaluations=len(seen), offspring_evaluated=done)
+
+
+@register_backend("hill_climb")
+class HillClimbBackend(SearchBackend):
+    """Greedy best-improvement search over one-mutation neighborhoods:
+    from the layerwise schedule, repeatedly apply the single combine /
+    separate that most improves fitness; stop at a local optimum (or after
+    ``max_steps``, default 10_000 moves)."""
+
+    name = "hill_climb"
+
+    def run(self, problem: SearchProblem, *, seed: int = 0,
+            observer: Optional[Observer] = None, **config) -> GAResult:
+        self._reject_unknown(config, "max_steps")
+        max_steps = int(config.get("max_steps", 10_000))
+        current = problem.initial()
+        current_f = problem.fitness(current)
+        history: List[float] = [current_f]
+        seen = {problem.key(current)}
+        done = 1
+        for step in range(max_steps):
+            moves = list(problem.neighbors(current))
+            if not moves:
+                break
+            fits = problem.fitness_batch(moves)
+            done += len(moves)
+            for g in moves:
+                seen.add(problem.key(g))
+            best_i = max(range(len(moves)), key=lambda i: fits[i])
+            if fits[best_i] <= current_f:
+                break                        # local optimum
+            current, current_f = moves[best_i], fits[best_i]
+            history.append(current_f)
+            if observer is not None and observer(step + 1, current_f,
+                                                 len(seen), done):
+                break
+        return GAResult(best_state=current, best_fitness=current_f,
+                        history=history, evaluations=len(seen),
+                        offspring_evaluated=done)
+
+
+@register_backend("exhaustive")
+class ExhaustiveBackend(SearchBackend):
+    """Enumerate and score the entire genome space (ground truth for small
+    graphs).  Refuses spaces larger than ``limit`` (default 2^16, the
+    paper's §III-A count of VGG-16's space; raise it explicitly for graphs
+    whose IR carries more edges)."""
+
+    name = "exhaustive"
+
+    def run(self, problem: SearchProblem, *, seed: int = 0,
+            observer: Optional[Observer] = None, **config) -> GAResult:
+        self._reject_unknown(config, "limit")
+        limit = int(config.get("limit", EXHAUSTIVE_LIMIT))
+        size = problem.space_size()
+        if size is None:
+            raise BackendError(
+                f"problem {problem.name!r} is not enumerable")
+        if size > limit:
+            raise BackendError(
+                f"space of {size} genomes exceeds the exhaustive limit "
+                f"{limit}; raise it via backend_config {{\"limit\": "
+                f"{size}}} if enumeration is affordable, or use ga / "
+                f"hill_climb / random instead")
+        best, best_f = None, -1.0
+        history: List[float] = []
+        done, step = 0, 0
+        genomes = iter(problem.enumerate())
+        while True:
+            chunk = list(itertools.islice(genomes, _CHUNK))
+            if not chunk:
+                break
+            fits = problem.fitness_batch(chunk)
+            done += len(chunk)
+            for g, f in zip(chunk, fits):
+                if f > best_f:
+                    best, best_f = g, f
+            history.append(best_f)
+            step += 1
+            if observer is not None and observer(step, best_f, done, done):
+                break
+        if best is None:
+            raise BackendError("empty genome space")
+        return GAResult(best_state=best, best_fitness=best_f, history=history,
+                        evaluations=done, offspring_evaluated=done)

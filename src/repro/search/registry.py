@@ -1,0 +1,137 @@
+"""String-keyed registries: workloads, accelerators, objectives, backends.
+
+Every extension point of the search facade is a named registry entry, so a
+new workload / accelerator template / objective / search strategy is one
+decorated function — not another entry-point script:
+
+    from repro.search import register_workload
+
+    @register_workload("tiny_cnn")
+    def tiny_cnn() -> LayerGraph: ...
+
+    repro search --workload tiny_cnn --accel simba --backend ga
+
+Accelerator specs additionally support the paper's Fig. 11 iso-capacity
+repartitioning inline: ``eyeriss@act+64`` moves 64 KiB of weight buffer to
+the activation buffer of the registered ``eyeriss`` template (``-`` moves it
+back), so buffer-sweep experiments need no pre-registered variant per point.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Iterator, List, Optional, TypeVar
+
+T = TypeVar("T")
+
+
+class RegistryError(LookupError):
+    """Unknown name, or a duplicate registration without ``replace=True``."""
+
+
+class Registry:
+    """A named string -> object table with decorator registration."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: Dict[str, object] = {}
+
+    def register(self, name: str, obj: Optional[T] = None, *,
+                 replace: bool = False):
+        """Register ``obj`` under ``name``; with ``obj`` omitted, returns a
+        decorator (``@REGISTRY.register("name")``)."""
+        def _add(o: T) -> T:
+            if not replace and name in self._entries:
+                raise RegistryError(
+                    f"{self.kind} {name!r} is already registered "
+                    f"(pass replace=True to override)")
+            self._entries[name] = o
+            return o
+        return _add if obj is None else _add(obj)
+
+    def get(self, name: str):
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise RegistryError(
+                f"unknown {self.kind} {name!r}; valid: "
+                + ", ".join(self.names())) from None
+
+    def names(self) -> List[str]:
+        return sorted(self._entries)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self.names())
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+WORKLOADS = Registry("workload")
+ACCELERATORS = Registry("accelerator")
+OBJECTIVES = Registry("objective")
+BACKENDS = Registry("backend")
+
+
+def register_workload(name: str, *, replace: bool = False):
+    """Decorator: register a ``(**kwargs) -> LayerGraph`` builder."""
+    return WORKLOADS.register(name, replace=replace)
+
+
+def register_accelerator(name: str, *, replace: bool = False):
+    """Decorator: register a ``() -> Accelerator`` template factory."""
+    return ACCELERATORS.register(name, replace=replace)
+
+
+def register_objective(name: str, *, replace: bool = False):
+    """Decorator: register a ``(ScheduleCost) -> float`` metric (lower is
+    better; fitness is baseline_metric / candidate_metric)."""
+    return OBJECTIVES.register(name, replace=replace)
+
+
+def register_backend(name: str, *, replace: bool = False):
+    """Decorator: register a :class:`repro.search.backends.SearchBackend`
+    subclass (instantiated per session)."""
+    return BACKENDS.register(name, replace=replace)
+
+
+def build_workload(name: str, **kwargs):
+    """Build a registered workload's :class:`LayerGraph`."""
+    return WORKLOADS.get(name)(**kwargs)
+
+
+_REPART = re.compile(r"^(?P<base>[\w.-]+)@act(?P<delta>[+-]\d+)$")
+
+
+def build_accelerator(spec: str):
+    """Resolve an accelerator spec: a registered template name, optionally
+    with a Fig.-11 repartition suffix (``eyeriss@act+64``)."""
+    m = _REPART.match(spec)
+    if m is None:
+        return ACCELERATORS.get(spec)()
+    acc = ACCELERATORS.get(m.group("base"))()
+    return acc.repartition(int(m.group("delta")))
+
+
+def _install_builtins() -> None:
+    """Populate the registries from the paper's tables (idempotent)."""
+    from repro.costmodel.accelerator import ARCHS
+    from repro.costmodel.evaluator import NATIVE_OBJECTIVES
+    from repro.workloads import WORKLOADS as _ZOO
+
+    for wname, builder in _ZOO.items():
+        if wname not in WORKLOADS:
+            WORKLOADS.register(wname, builder)
+    for aname, acc in ARCHS.items():
+        if aname not in ACCELERATORS:
+            # bind the frozen template; repartition variants derive from it
+            ACCELERATORS.register(aname, (lambda a: lambda: a)(acc))
+    for obj in NATIVE_OBJECTIVES:
+        if obj not in OBJECTIVES:
+            OBJECTIVES.register(
+                obj, (lambda o: lambda cost: cost.metric(o))(obj))
+
+
+_install_builtins()

@@ -1,0 +1,181 @@
+"""Search sessions: resolve a spec, drive a backend, produce an artifact.
+
+    spec    = SearchSpec(workload="mobilenet_v3", accelerator="simba")
+    session = SearchSession(spec)
+    artifact = session.run(progress=print)      # -> ScheduleArtifact
+
+The session owns the live objects (graph, evaluator, problem, backend
+result) so in-process callers can inspect caches or render schedules, while
+the returned artifact is the durable, serializable product.  Budget and
+patience from the spec are enforced here through the backend observer hook,
+so individual backends stay oblivious to stopping policy.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, NamedTuple, Optional
+
+from repro.core.graph import LayerGraph
+from repro.core.problem import FusionProblem
+from repro.costmodel.accelerator import Accelerator
+from repro.costmodel.energy import DEFAULT_ENERGY, EnergyModel
+from repro.costmodel.evaluator import NATIVE_OBJECTIVES, Evaluator
+
+from repro.search.artifact import ScheduleArtifact, make_artifact
+from repro.search.backends import BackendError
+from repro.search.registry import (BACKENDS, OBJECTIVES, build_accelerator,
+                                   build_workload)
+from repro.search.spec import SearchSpec
+
+
+class Progress(NamedTuple):
+    """One progress tick from the running backend."""
+    step: int                 # generation / chunk index (backend-defined)
+    best_fitness: float
+    evaluations: int          # unique genomes scored
+    offspring_evaluated: int  # total genomes submitted
+
+
+class _CustomObjectiveProblem(FusionProblem):
+    """Fusion problem scored by a registry objective the evaluator does not
+    know natively: costs still come from the memoized group cache, but the
+    metric is the registered ``(ScheduleCost) -> float`` function."""
+
+    def __init__(self, graph, evaluator, objective: str):
+        super().__init__(graph, evaluator, objective)
+        self._metric = OBJECTIVES.get(objective)
+        self._baseline = self._metric(evaluator.layerwise())
+
+    def fitness(self, genome) -> float:
+        cost = self.evaluator.evaluate(genome)
+        if cost is None:
+            return 0.0
+        new = self._metric(cost)
+        return self._baseline / new if new > 0 else 0.0
+
+    def fitness_batch(self, genomes):
+        return [self.fitness(g) for g in genomes]
+
+
+class SearchSession:
+    """One search: spec -> (resolved objects) -> backend run -> artifact."""
+
+    def __init__(self, spec: SearchSpec, *, graph: Optional[LayerGraph] = None,
+                 accelerator: Optional[Accelerator] = None,
+                 em: Optional[EnergyModel] = None):
+        self.spec = spec
+        # resolve everything eagerly so bad names fail at session creation,
+        # not generations into a search
+        if "seed" in spec.backend_config or "observer" in spec.backend_config:
+            raise BackendError(
+                "set the seed via SearchSpec.seed (CLI: --seed) and progress "
+                "hooks via run(progress=...), not backend_config")
+        ga_cfg = spec.backend_config.get("ga_config")
+        ga_obj = ga_cfg.get("objective", spec.objective) \
+            if isinstance(ga_cfg, dict) else \
+            getattr(ga_cfg, "objective", spec.objective)
+        if ga_obj != spec.objective:
+            # run_ga_problem never reads GAConfig.objective (the problem
+            # carries the spec's); a divergent value would be silently
+            # ignored, so refuse it instead
+            raise BackendError(
+                f"ga_config objective {ga_obj!r} conflicts with "
+                f"SearchSpec.objective {spec.objective!r}")
+        self.backend = BACKENDS.get(spec.backend)()
+        OBJECTIVES.get(spec.objective)
+        self.graph = graph if graph is not None else \
+            build_workload(spec.workload, **spec.workload_kwargs)
+        self.accelerator = accelerator if accelerator is not None else \
+            build_accelerator(spec.accelerator)
+        self.evaluator = Evaluator(self.graph, self.accelerator,
+                                   em or DEFAULT_ENERGY)
+        if spec.objective in NATIVE_OBJECTIVES:
+            self.problem = FusionProblem(self.graph, self.evaluator,
+                                         spec.objective)
+        else:
+            self.problem = _CustomObjectiveProblem(self.graph, self.evaluator,
+                                                   spec.objective)
+        self.result = None                 # GAResult after run()
+        self.artifact: Optional[ScheduleArtifact] = None
+
+    @classmethod
+    def from_objects(cls, graph: LayerGraph, accelerator: Accelerator,
+                     spec: Optional[SearchSpec] = None, *,
+                     em: Optional[EnergyModel] = None,
+                     **spec_kwargs) -> "SearchSession":
+        """Session over pre-built objects (graphs not in the registry);
+        the spec records their names for provenance."""
+        if spec is None:
+            spec = SearchSpec(workload=graph.name,
+                              accelerator=accelerator.name, **spec_kwargs)
+        return cls(spec, graph=graph, accelerator=accelerator, em=em)
+
+    # ---- running ---------------------------------------------------------------
+    def _observer(self, progress: Optional[Callable[[Progress], None]]):
+        spec = self.spec
+        state = {"best": -1.0, "stale": 0}
+
+        def observe(step: int, best: float, evals: int, offspring: int
+                    ) -> bool:
+            if progress is not None:
+                progress(Progress(step, best, evals, offspring))
+            stop = False
+            if spec.budget is not None and offspring >= spec.budget:
+                stop = True
+            if spec.patience is not None:
+                if best > state["best"] + 1e-15:
+                    state["best"], state["stale"] = best, 0
+                else:
+                    state["stale"] += 1
+                    if state["stale"] >= spec.patience:
+                        stop = True
+            return stop
+
+        return observe
+
+    def run(self, progress: Optional[Callable[[Progress], None]] = None
+            ) -> ScheduleArtifact:
+        """Drive the backend to completion and package the artifact."""
+        t0 = time.perf_counter()
+        self.result = self.backend.run(
+            self.problem, seed=self.spec.seed,
+            observer=self._observer(progress), **self.spec.backend_config)
+        wall_s = time.perf_counter() - t0
+        best_cost = self.evaluator.evaluate(self.result.best_state)
+        assert best_cost is not None, \
+            "backend returned an invalid best state"
+        self.artifact = make_artifact(
+            self.spec, self.graph, self.result,
+            baseline=self.evaluator.layerwise(), best=best_cost,
+            wall_s=wall_s, backend_stats=self.evaluator.cache_stats())
+        return self.artifact
+
+    # ---- compatibility ----------------------------------------------------------
+    def schedule_result(self):
+        """The pre-facade :class:`repro.core.schedule.ScheduleResult` view
+        (kept for the ``core.schedule.optimize`` shim and report rendering)."""
+        from repro.core.schedule import ScheduleResult
+        assert self.result is not None and self.artifact is not None, \
+            "run() the session first"
+        return ScheduleResult(
+            workload=self.graph.name, accelerator=self.accelerator.name,
+            baseline=self.artifact.baseline, best=self.artifact.best,
+            best_state=self.result.best_state, ga=self.result)
+
+
+def search(workload: str, accelerator: str = "simba", *,
+           objective: str = "edp", backend: str = "ga", seed: int = 0,
+           budget: Optional[int] = None, patience: Optional[int] = None,
+           backend_config: Optional[dict] = None,
+           workload_kwargs: Optional[dict] = None,
+           progress: Optional[Callable[[Progress], None]] = None
+           ) -> ScheduleArtifact:
+    """One-call facade: build the spec, run the session, return the
+    artifact.  Use :class:`SearchSession` directly when you need the live
+    evaluator/result objects afterwards."""
+    spec = SearchSpec(workload=workload, accelerator=accelerator,
+                      objective=objective, backend=backend,
+                      backend_config=backend_config or {},
+                      workload_kwargs=workload_kwargs or {},
+                      seed=seed, budget=budget, patience=patience)
+    return SearchSession(spec).run(progress=progress)

@@ -1,0 +1,68 @@
+"""Declarative search specification: everything needed to (re)run a search.
+
+A :class:`SearchSpec` is the unit a scheduler service accepts and an
+artifact embeds: registry names (not live objects) plus backend config,
+seed, and budget, so it JSON-round-trips and two specs can be diffed
+field-by-field.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+
+@dataclass(frozen=True)
+class SearchSpec:
+    """What to search: (workload, accelerator, objective) — and how:
+    (backend + config, seed, budget).
+
+    ``workload``/``accelerator``/``objective``/``backend`` are registry
+    names (``repro.search.registry``); ``accelerator`` may carry a
+    repartition suffix (``eyeriss@act+64``).  ``budget`` stops the search
+    at the end of the first backend step (generation/chunk) that reaches
+    this many offspring evaluations — the cap can overshoot by up to one
+    step's worth (None = backend default); ``patience`` stops after that
+    many steps without improvement (None = run the full budget).
+    """
+
+    workload: str
+    accelerator: str = "simba"
+    objective: str = "edp"
+    backend: str = "ga"
+    backend_config: Dict[str, Any] = field(default_factory=dict)
+    workload_kwargs: Dict[str, Any] = field(default_factory=dict)
+    seed: int = 0
+    budget: Optional[int] = None
+    patience: Optional[int] = None
+
+    def __post_init__(self):
+        # freeze the nested dicts against aliasing surprises: specs are
+        # copied into artifacts and compared across sessions
+        object.__setattr__(self, "backend_config",
+                           dict(self.backend_config))
+        object.__setattr__(self, "workload_kwargs",
+                           dict(self.workload_kwargs))
+
+    # ---- serialization --------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "SearchSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown SearchSpec fields: {sorted(unknown)}")
+        return cls(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "SearchSpec":
+        return cls.from_dict(json.loads(text))
+
+    def replace(self, **changes) -> "SearchSpec":
+        return dataclasses.replace(self, **changes)

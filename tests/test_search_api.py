@@ -1,0 +1,294 @@
+"""The `repro.search` facade: registries, spec/artifact round-trips,
+backend sanity, and compatibility with the pre-facade entry points."""
+import json
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import GAConfig, optimize
+from repro.core.fusion import FusionState
+from repro.core.ga import run_ga
+from repro.costmodel import SIMBA, Evaluator
+from repro.search import (BACKENDS, OBJECTIVES, WORKLOADS, BackendError,
+                          FingerprintMismatch, RegistryError,
+                          ScheduleArtifact, SearchSession, SearchSpec,
+                          build_accelerator, graph_fingerprint,
+                          register_objective, search)
+from repro.workloads import mobilenet_v3_large
+from tests.test_fusion import chain, skip_graph
+from tests.test_ga import brute_force_best
+
+
+# ---- registries -------------------------------------------------------------------
+
+def test_registry_unknown_name_lists_valid():
+    with pytest.raises(RegistryError) as e:
+        WORKLOADS.get("nope")
+    msg = str(e.value)
+    assert "nope" in msg and "mobilenet_v3" in msg and "vgg16" in msg
+
+
+def test_registry_duplicate_requires_replace():
+    with pytest.raises(RegistryError):
+        WORKLOADS.register("mobilenet_v3", mobilenet_v3_large)
+    WORKLOADS.register("mobilenet_v3", mobilenet_v3_large, replace=True)
+
+
+def test_register_decorator_and_custom_objective():
+    name = "test_ed2_objective"
+    if name not in OBJECTIVES:
+        @register_objective(name)
+        def ed2(cost):
+            return cost.energy_pj * cost.cycles ** 2
+    art = search("mobilenet_v3", "simba", objective=name, backend="ga",
+                 backend_config={"preset": "fast", "generations": 3}, seed=0)
+    assert art.best_fitness >= 1.0
+    assert art.spec.objective == name
+
+
+def test_accelerator_repartition_spec():
+    acc = build_accelerator("eyeriss@act+64")
+    assert acc.act_buf_kib == 192 and acc.weight_buf_kib == 448
+    acc = build_accelerator("eyeriss@act-32")
+    assert acc.act_buf_kib == 96 and acc.weight_buf_kib == 544
+    with pytest.raises(RegistryError):
+        build_accelerator("notanarch@act+64")
+
+
+# ---- spec -------------------------------------------------------------------------
+
+def test_spec_json_round_trip():
+    spec = SearchSpec(workload="resnet50", accelerator="eyeriss@act+64",
+                      backend="hill_climb", backend_config={"max_steps": 5},
+                      seed=3, budget=1000, patience=7)
+    again = SearchSpec.from_json(spec.to_json())
+    assert again == spec
+
+
+def test_spec_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown SearchSpec fields"):
+        SearchSpec.from_dict({"workload": "resnet50", "turbo": True})
+
+
+# ---- artifact ---------------------------------------------------------------------
+
+def test_artifact_json_round_trip(tmp_path):
+    art = search("mobilenet_v3", "simba", backend="ga", seed=0,
+                 backend_config={"preset": "fast", "generations": 5})
+    path = tmp_path / "a.json"
+    art.save(str(path))
+    loaded = ScheduleArtifact.load(str(path))
+    assert loaded.genome_mask == art.genome_mask
+    assert loaded.graph_fingerprint == art.graph_fingerprint
+    assert loaded.best_fitness == art.best_fitness
+    assert loaded.best.edp == art.best.edp
+    assert loaded.baseline.edp == art.baseline.edp
+    assert loaded.history == art.history
+    assert loaded.spec == art.spec
+    # genome re-binds onto a freshly built graph, no re-search
+    state = loaded.rebuild_state()
+    assert state.mask == art.genome_mask
+    assert state.is_schedulable()
+
+
+def test_artifact_fingerprint_mismatch_rejected():
+    art = search("mobilenet_v3", "simba", backend="ga", seed=0,
+                 backend_config={"preset": "fast", "generations": 2})
+    with pytest.raises(FingerprintMismatch):
+        art.state(chain(5))
+    # same builder, different kwargs -> structurally different graph
+    from repro.workloads import unet
+    art_u = search("unet", "simba", backend="random", seed=0,
+                   backend_config={"evaluations": 10})
+    with pytest.raises(FingerprintMismatch):
+        art_u.state(unet(hw=128))
+    assert art_u.state(unet()).mask == art_u.genome_mask
+
+
+def test_artifact_version_gate():
+    art = search("mobilenet_v3", "simba", backend="random", seed=0,
+                 backend_config={"evaluations": 5})
+    d = art.to_dict()
+    d["version"] = 999
+    with pytest.raises(ValueError, match="version"):
+        ScheduleArtifact.from_dict(d)
+
+
+def test_fingerprint_is_structural():
+    g1, g2 = mobilenet_v3_large(), mobilenet_v3_large()
+    assert graph_fingerprint(g1) == graph_fingerprint(g2)
+    assert graph_fingerprint(g1) != graph_fingerprint(chain(4))
+
+
+# ---- backends ---------------------------------------------------------------------
+
+def test_cross_backend_sanity_fixed_seed():
+    """ga >= random >= baseline on MobileNet-v3 / SIMBA (GAConfig.fast)."""
+    ga = search("mobilenet_v3", "simba", backend="ga", seed=0,
+                backend_config={"preset": "fast", "generations": 25})
+    rnd = search("mobilenet_v3", "simba", backend="random", seed=0,
+                 backend_config={"evaluations": 500})
+    assert ga.best_fitness >= rnd.best_fitness >= 1.0
+    assert ga.edp_improvement > 1.2          # matches pre-facade GA quality
+
+
+def test_exhaustive_matches_brute_force_on_small_graphs():
+    for g in (chain(5), skip_graph()):
+        ev = Evaluator(g, SIMBA)
+        bf_f, _ = brute_force_best(g, ev)
+        session = SearchSession.from_objects(g, SIMBA, backend="exhaustive")
+        art = session.run()
+        assert art.best_fitness == pytest.approx(bf_f, rel=1e-9)
+
+
+def test_hill_climb_beats_baseline_and_is_monotone():
+    session = SearchSession.from_objects(chain(6), SIMBA,
+                                         backend="hill_climb")
+    art = session.run()
+    assert art.best_fitness >= 1.0
+    h = art.history
+    assert all(b >= a for a, b in zip(h, h[1:]))
+
+
+def test_exhaustive_refuses_oversized_space():
+    with pytest.raises(BackendError, match="exceeds the exhaustive limit"):
+        search("mobilenet_v3", "simba", backend="exhaustive")
+
+
+def test_tpu_search_accepts_ga_backend_config():
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES
+    from repro.search.tpu import search_tpu_schedule
+    res = search_tpu_schedule(
+        get_config("stablelm-1.6b"), SHAPES["train_4k"], backend="ga",
+        backend_config={"preset": "fast", "generations": 5})
+    assert res.best_cost.edp <= res.baseline_cost.edp
+
+
+def test_backend_rejects_unknown_config_keys():
+    with pytest.raises(BackendError, match="unknown backend config"):
+        search("mobilenet_v3", "simba", backend="random",
+               backend_config={"evals": 5})
+    with pytest.raises(BackendError, match="preset"):
+        search("mobilenet_v3", "simba", backend="ga",
+               backend_config={"preset": "warp"})
+
+
+def test_session_rejects_seed_in_backend_config():
+    with pytest.raises(BackendError, match="SearchSpec.seed"):
+        SearchSession(SearchSpec(workload="mobilenet_v3",
+                                 backend_config={"seed": 1}))
+    with pytest.raises(BackendError, match="SearchSpec.objective"):
+        search("mobilenet_v3", backend="ga",
+               backend_config={"objective": "energy"})
+    with pytest.raises(BackendError, match="conflicts with"):
+        search("mobilenet_v3", backend="ga",
+               backend_config={"ga_config": {"objective": "energy"}})
+    with pytest.raises(BackendError, match="bad ga_config"):
+        search("mobilenet_v3", backend="ga",
+               backend_config={"ga_config": {"typo": 5}})
+    with pytest.raises(BackendError, match="must be a GAConfig"):
+        search("mobilenet_v3", backend="ga",
+               backend_config={"ga_config": 5})
+
+
+def test_ga_config_dict_honors_spec_seed():
+    """A seed-less ga_config dict (JSON form) inherits SearchSpec.seed."""
+    import dataclasses
+    cfg = dataclasses.asdict(GAConfig.fast(generations=5))
+    del cfg["seed"]
+    arts = [search("mobilenet_v3", backend="ga", seed=s,
+                   backend_config={"ga_config": dict(cfg)})
+            for s in (0, 3)]
+    assert arts[0].genome_mask != arts[1].genome_mask
+
+
+# ---- session hooks ----------------------------------------------------------------
+
+def test_session_budget_stops_early():
+    spec = SearchSpec(workload="mobilenet_v3", accelerator="simba",
+                      backend="ga", budget=200,
+                      backend_config={"preset": "fast", "generations": 50})
+    art = SearchSession(spec).run()
+    # one generation of GAConfig.fast is 40 offspring (+ top-ups): the budget
+    # must cut the run far below 50 generations' worth
+    assert art.offspring_evaluated <= 400
+    assert len(art.history) < 50
+
+
+def test_session_progress_hook_sees_every_generation():
+    ticks = []
+    spec = SearchSpec(workload="mobilenet_v3", accelerator="simba",
+                      backend="ga",
+                      backend_config={"preset": "fast", "generations": 4})
+    SearchSession(spec).run(progress=ticks.append)
+    assert [t.step for t in ticks] == [0, 1, 2, 3]
+    assert ticks[-1].best_fitness >= 1.0
+
+
+def test_session_patience_stops_on_plateau():
+    spec = SearchSpec(workload="mobilenet_v3", accelerator="simba",
+                      backend="ga", patience=3,
+                      backend_config={"preset": "fast", "generations": 200})
+    art = SearchSession(spec).run()
+    assert art.best_fitness >= 1.0
+    assert len(art.history) < 200    # plateau cut the run well short
+
+
+# ---- compatibility with pre-facade entry points -----------------------------------
+
+def test_optimize_shim_matches_direct_ga_run():
+    """core.schedule.optimize routes through repro.search and stays
+    bit-identical to driving run_ga directly (fixed seed)."""
+    g = mobilenet_v3_large()
+    cfg = GAConfig.fast(generations=10, seed=0)
+    direct = run_ga(g, Evaluator(g, SIMBA), cfg)
+    shim = optimize(g, SIMBA, cfg)
+    assert shim.best_state.mask == direct.best_state.mask
+    assert shim.ga.best_fitness == direct.best_fitness
+    assert shim.ga.history == direct.history
+
+
+def test_artifact_reproduces_search_edp_without_rerun(tmp_path):
+    """The acceptance flow: search -> artifact -> report-side reload gives
+    the same best EDP with no re-search."""
+    art = search("mobilenet_v3", "simba", backend="ga", seed=0,
+                 backend_config={"preset": "fast", "generations": 10})
+    path = tmp_path / "a.json"
+    art.save(str(path))
+    loaded = ScheduleArtifact.load(str(path))
+    # the stored cost alone reproduces the EDP...
+    assert loaded.best.edp == art.best.edp
+    # ...and re-costing the stored genome on a rebuilt evaluator agrees
+    state = loaded.rebuild_state()
+    recosted = Evaluator(state.graph, SIMBA).evaluate(state)
+    assert recosted.edp == pytest.approx(loaded.best.edp, rel=1e-12)
+
+
+# ---- CLI --------------------------------------------------------------------------
+
+def test_cli_search_then_report(tmp_path):
+    from repro.__main__ import main
+    out = tmp_path / "cli.json"
+    rc = main(["search", "--workload", "mobilenet_v3", "--accel", "simba",
+               "--backend", "ga", "--preset", "fast", "--generations", "3",
+               "--out", str(out)])
+    assert rc == 0 and out.exists()
+    assert main(["report", str(out)]) == 0
+    assert main(["report", str(out), "--schedule", "--history"]) == 0
+    assert main(["search", "--workload", "nope", "--out", str(out)]) == 2
+    assert main(["report", str(tmp_path / "missing.json")]) == 2
+
+
+def test_cli_module_invocation(tmp_path):
+    out = tmp_path / "m.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro", "search", "--workload",
+         "mobilenet_v3", "--backend", "random", "--backend-config",
+         '{"evaluations": 20}', "--out", str(out)],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr
+    data = json.loads(out.read_text())
+    assert data["spec"]["workload"] == "mobilenet_v3"
+    assert int(data["genome_mask"], 16) >= 0
