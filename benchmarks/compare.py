@@ -1,0 +1,113 @@
+"""Compare a fresh ``benchmarks/run.py --json`` report against a committed
+baseline and fail on perf regressions — the teeth of the CI perf canary.
+
+    python -m benchmarks.compare BENCH_ga.json /tmp/bench_now.json
+    python -m benchmarks.compare base.json now.json \
+        --metric ga_convergence:evals_per_sec --max-regression 0.30
+
+A comparison targets one ``record_name:field`` metric (default:
+``ga_convergence:evals_per_sec``, the GA engine's headline throughput).
+The run fails (exit 1) when::
+
+    now < baseline * (1 - max_regression)
+
+Higher-is-better is assumed; pass ``--lower-is-better`` for time-like
+metrics.  ``--max-regression`` defaults to 0.30 — wide enough to absorb
+normal machine-to-machine and run-to-run noise while still catching the
+step-function slowdowns an accidental O(n^2) or a dropped cache causes.
+Override per-environment with ``BENCH_MAX_REGRESSION``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Optional
+
+
+def _load_metric(path: str, record_name: str, field: str) -> float:
+    with open(path) as f:
+        report = json.load(f)
+    for rec in report.get("records", []):
+        if rec.get("name") == record_name:
+            if field not in rec:
+                raise KeyError(
+                    f"{path}: record {record_name!r} has no field "
+                    f"{field!r}; fields: {sorted(rec)}")
+            return float(rec[field])
+    names = sorted({r.get("name") for r in report.get("records", [])})
+    raise KeyError(f"{path}: no record named {record_name!r}; "
+                   f"records present: {names or '(none)'}")
+
+
+def compare(baseline_path: str, current_path: str, *,
+            metric: str = "ga_convergence:evals_per_sec",
+            max_regression: float = 0.30,
+            lower_is_better: bool = False) -> dict:
+    """Return a comparison dict; ``ok`` is False on a regression beyond
+    ``max_regression`` (fractional)."""
+    record_name, _, field = metric.partition(":")
+    if not field:
+        raise ValueError(
+            f"metric must be 'record_name:field', got {metric!r}")
+    base = _load_metric(baseline_path, record_name, field)
+    now = _load_metric(current_path, record_name, field)
+    if base <= 0:
+        raise ValueError(f"baseline {metric} is {base}; cannot compare")
+    change = (now - base) / base
+    regression = -change if not lower_is_better else change
+    return {
+        "metric": metric,
+        "baseline": base,
+        "current": now,
+        "change_frac": change,
+        "max_regression": max_regression,
+        "ok": regression <= max_regression,
+    }
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail if a benchmark metric regressed vs a baseline")
+    ap.add_argument("baseline", help="committed BENCH_*.json baseline")
+    ap.add_argument("current", help="fresh benchmarks/run.py --json output")
+    ap.add_argument("--metric", default="ga_convergence:evals_per_sec",
+                    help="record_name:field to compare (default: "
+                         "ga_convergence:evals_per_sec)")
+    ap.add_argument("--max-regression",
+                    type=float,
+                    default=float(os.environ.get("BENCH_MAX_REGRESSION",
+                                                 0.30)),
+                    help="allowed fractional drop before failing "
+                         "(default 0.30, env BENCH_MAX_REGRESSION)")
+    ap.add_argument("--lower-is-better", action="store_true",
+                    help="treat increases as regressions (time-like "
+                         "metrics)")
+    args = ap.parse_args(argv)
+
+    try:
+        res = compare(args.baseline, args.current, metric=args.metric,
+                      max_regression=args.max_regression,
+                      lower_is_better=args.lower_is_better)
+    except (OSError, KeyError, ValueError, json.JSONDecodeError) as e:
+        print(f"compare error: {e}", file=sys.stderr)
+        return 2
+
+    direction = "+" if res["change_frac"] >= 0 else ""
+    print(f"{res['metric']}: baseline={res['baseline']:.1f} "
+          f"current={res['current']:.1f} "
+          f"({direction}{res['change_frac'] * 100:.1f}%, "
+          f"allowed regression {res['max_regression'] * 100:.0f}%)")
+    if not res["ok"]:
+        print("PERF REGRESSION: metric fell beyond the allowed window "
+              "(rerun to rule out noise; if the slowdown is real, fix it "
+              "or re-baseline BENCH_ga.json in the same PR with a "
+              "justification)", file=sys.stderr)
+        return 1
+    print("perf canary OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,13 +22,16 @@ def _add_search_parser(sub) -> None:
                    help="registered workload name (see `repro list`)")
     p.add_argument("--workload-kwargs", default="{}", metavar="JSON",
                    help="builder kwargs, e.g. '{\"hw\": 128}'")
-    p.add_argument("--accel", default="simba",
-                   help="accelerator template, optionally repartitioned "
-                        "(e.g. eyeriss@act+64)")
+    p.add_argument("--accelerator", "--accel", dest="accelerator",
+                   default="simba",
+                   help="accelerator (repro.hw catalog name), optionally "
+                        "repartitioned (e.g. eyeriss@act+64)")
     p.add_argument("--objective", default="edp",
                    help="registered objective (edp|energy|cycles|dram|...)")
     p.add_argument("--backend", default="ga",
                    help="search backend (ga|random|hill_climb|exhaustive|...)")
+    p.add_argument("--costmodel", default="default",
+                   help="cost backend scoring the schedules (default|tpu|...)")
     p.add_argument("--backend-config", default="{}", metavar="JSON",
                    help="backend options, e.g. '{\"crossover_rate\": 0.1}'")
     p.add_argument("--preset", choices=("paper", "fast"), default=None,
@@ -53,6 +56,9 @@ def _add_report_parser(sub) -> None:
     p.add_argument("--schedule", action="store_true",
                    help="rebuild the workload and render the fused schedule "
                         "(paper Fig. 9 analogue)")
+    p.add_argument("--breakdown", action="store_true",
+                   help="show the per-group cost breakdown table in full "
+                        "(a top-10 view prints by default)")
     p.add_argument("--history", action="store_true",
                    help="print the convergence history trace")
     p.add_argument("--json", action="store_true",
@@ -76,15 +82,16 @@ def _cmd_search(args) -> int:
                   f"evals {p.evaluations}", file=sys.stderr)
 
     artifact = search(
-        args.workload, args.accel, objective=args.objective,
-        backend=args.backend, seed=args.seed, budget=args.budget,
-        patience=args.patience, backend_config=backend_config,
+        args.workload, args.accelerator, objective=args.objective,
+        backend=args.backend, costmodel=args.costmodel, seed=args.seed,
+        budget=args.budget, patience=args.patience,
+        backend_config=backend_config,
         workload_kwargs=json.loads(args.workload_kwargs),
         progress=progress if every else None)
     artifact.save(args.out)
     s = artifact.summary()
     print(f"{s['workload']} on {s['accelerator']} [{s['backend']}, "
-          f"seed {s['seed']}]: "
+          f"costmodel {s['costmodel']}, seed {s['seed']}]: "
           f"energy x{s['energy_x']}  {artifact.spec.objective} best "
           f"{artifact.best_fitness:.4f}  edp x{s['edp_x']}  "
           f"groups {s['groups']}  "
@@ -107,6 +114,7 @@ def _cmd_report(args) -> int:
         print(f"backend      : {s['backend']} (seed {s['seed']}, "
               f"{artifact.evaluations} unique evals, "
               f"{artifact.wall_s:.1f}s)")
+        print(f"costmodel    : {s['costmodel']}")
         print(f"objective    : {artifact.spec.objective} "
               f"(best fitness {artifact.best_fitness:.4f})")
         print(f"improvements : energy x{s['energy_x']}  edp x{s['edp_x']}  "
@@ -116,6 +124,11 @@ def _cmd_report(args) -> int:
         print(f"genome       : {artifact.genome_mask:#x} "
               f"({len(artifact.fused_edges)}/{artifact.n_edges} edges fused)")
         print(f"fingerprint  : {artifact.graph_fingerprint}")
+    if not args.json:
+        from repro.core.report import breakdown_report
+        print()
+        print(breakdown_report(artifact.group_breakdowns,
+                               max_rows=0 if args.breakdown else 10))
     if args.history and artifact.history:
         h = artifact.history
         marks = sorted({0, len(h) // 4, len(h) // 2, 3 * len(h) // 4,
@@ -150,11 +163,12 @@ def _schedule_result(artifact):
 
 
 def _cmd_list(_args) -> int:
-    from repro.search import ACCELERATORS, BACKENDS, OBJECTIVES, WORKLOADS
-    for reg in (WORKLOADS, ACCELERATORS, OBJECTIVES, BACKENDS):
+    from repro.search import (ACCELERATORS, BACKENDS, COSTMODELS, OBJECTIVES,
+                              WORKLOADS)
+    for reg in (WORKLOADS, ACCELERATORS, OBJECTIVES, BACKENDS, COSTMODELS):
         print(f"{reg.kind}s: " + ", ".join(reg.names()))
     print("(accelerators accept an iso-capacity repartition suffix: "
-          "eyeriss@act+64)")
+          "eyeriss@act+64; `repro.hw` holds their hierarchical descriptions)")
     return 0
 
 

@@ -3,16 +3,20 @@
 Renders a GA-optimized fusion schedule as per-group rows (members, tile
 height, buffer occupancy, DRAM traffic, EDP share) so the "adjacent bars
 with the same color are fused" figure has a terminal-friendly counterpart.
+:func:`breakdown_report` renders the per-group :class:`CostBreakdown`s a
+search artifact stores — where energy and cycles go, group by group —
+without rebuilding the graph or re-running the cost model.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 from repro.core.fusion import FusionState
 from repro.core.receptive import (group_footprint_words, max_tile_rows,
                                   receptive_field_hw)
 from repro.core.schedule import ScheduleResult
 from repro.core.toposort import topological_sort_edges
+from repro.costmodel.base import CostBreakdown
 
 
 def schedule_report(res: ScheduleResult, acc, max_rows: int = 0) -> str:
@@ -46,5 +50,48 @@ def schedule_report(res: ScheduleResult, acc, max_rows: int = 0) -> str:
         shown += 1
         if max_rows and shown >= max_rows:
             lines.append(f"  ... ({len(sched) - shown} more groups)")
+            break
+    return "\n".join(lines)
+
+
+def breakdown_report(breakdowns: Sequence[CostBreakdown],
+                     max_rows: int = 10) -> str:
+    """Per-group cost table from stored :class:`CostBreakdown`s (what
+    ``repro report`` renders): each group's energy/cycle share, whether
+    compute or DRAM binds it, the mapping decisions (tile rows, weight
+    passes), and its dominant energy component.
+
+    Groups are shown largest-energy-first; ``max_rows=0`` shows all.
+    """
+    if not breakdowns:
+        return "(artifact stores no per-group cost breakdowns)"
+    total_e = sum(bd.energy_pj for bd in breakdowns) or 1.0
+    total_c = sum(bd.cycles for bd in breakdowns) or 1.0
+    order = sorted(range(len(breakdowns)),
+                   key=lambda i: -breakdowns[i].energy_pj)
+    lines = [
+        f"{'group':>5} {'n':>3} {'energy%':>7} {'cycle%':>6} {'bound':>7} "
+        f"{'tile':>4} {'wpass':>5} {'util':>5}  top-term  members",
+    ]
+    shown = 0
+    for i in order:
+        bd = breakdowns[i]
+        bound = "dram" if bd.dram_cycles >= bd.compute_cycles else "compute"
+        top = max(bd.energy_terms, key=bd.energy_terms.get) \
+            if bd.energy_terms else "-"
+        label = ",".join(bd.members[:3]) \
+            + ("..." if len(bd.members) > 3 else "")
+        lines.append(
+            f"{i:>5} {len(bd.members):>3} {bd.energy_pj / total_e * 100:>6.1f}%"
+            f" {bd.cycles / total_c * 100:>5.1f}% {bound:>7} "
+            f"{bd.tile_rows:>4} {bd.weight_passes:>5} "
+            f"{bd.utilization:>5.2f}  {top:<8}  {label}")
+        shown += 1
+        if max_rows and shown >= max_rows and shown < len(breakdowns):
+            rest = len(breakdowns) - shown
+            rest_e = sum(breakdowns[j].energy_pj
+                         for j in order[shown:]) / total_e * 100
+            lines.append(f"  ... ({rest} more groups, {rest_e:.1f}% of "
+                         f"energy; --breakdown shows all)")
             break
     return "\n".join(lines)

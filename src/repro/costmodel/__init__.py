@@ -1,8 +1,14 @@
 from repro.costmodel.accelerator import ARCHS, EYERISS, SIMBA, SIMBA2X2, Accelerator
+from repro.costmodel.base import CostBreakdown, CostModel, GroupKey
+from repro.costmodel.default import DefaultCostModel
 from repro.costmodel.energy import DEFAULT_ENERGY, EnergyModel
 from repro.costmodel.evaluator import Evaluator, ScheduleCost
-from repro.costmodel.mapper import LayerCost, map_layer, spatial_utilization
+from repro.costmodel.mapper import (LayerCost, map_layer, resolve_dataflow,
+                                    spatial_utilization)
+from repro.costmodel.tpu_fusion import TpuFusionCostModel
 
 __all__ = ["ARCHS", "EYERISS", "SIMBA", "SIMBA2X2", "Accelerator",
-           "DEFAULT_ENERGY", "EnergyModel", "Evaluator", "ScheduleCost",
-           "LayerCost", "map_layer", "spatial_utilization"]
+           "CostBreakdown", "CostModel", "DEFAULT_ENERGY",
+           "DefaultCostModel", "EnergyModel", "Evaluator", "GroupKey",
+           "LayerCost", "ScheduleCost", "TpuFusionCostModel", "map_layer",
+           "resolve_dataflow", "spatial_utilization"]

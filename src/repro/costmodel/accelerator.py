@@ -21,7 +21,7 @@ class Accelerator:
     macs_per_pe: int
     act_buf_kib: int
     weight_buf_kib: int
-    dataflow: str                 # "row_stationary" | "weight_stationary"
+    dataflow: str     # "row_stationary" | "weight_stationary" | "flexible"
     clock_mhz: float = 200.0
     dram_gbps: float = 128.0
     word_bytes: int = 2
@@ -50,12 +50,22 @@ class Accelerator:
     def repartition(self, act_delta_kib: int) -> "Accelerator":
         """Iso-capacity buffer repartitioning (paper Fig. 11): move
         ``act_delta_kib`` KiB from the weight buffer to the activation buffer
-        (negative = the other way)."""
+        (negative = the other way).  Total on-chip capacity is preserved by
+        construction; a delta that drives either buffer non-positive is a
+        meaningless machine and is refused."""
+        act = self.act_buf_kib + act_delta_kib
+        wgt = self.weight_buf_kib - act_delta_kib
+        if act <= 0 or wgt <= 0:
+            raise ValueError(
+                f"repartition({act_delta_kib:+d}) of {self.name!r} leaves "
+                f"act={act} KiB / weight={wgt} KiB; both buffers must stay "
+                f"positive (valid deltas: "
+                f"{1 - self.act_buf_kib}..{self.weight_buf_kib - 1})")
         return replace(
             self,
-            name=f"{self.name}_act{self.act_buf_kib + act_delta_kib}k",
-            act_buf_kib=self.act_buf_kib + act_delta_kib,
-            weight_buf_kib=self.weight_buf_kib - act_delta_kib,
+            name=f"{self.name}_act{act}k",
+            act_buf_kib=act,
+            weight_buf_kib=wgt,
         )
 
 

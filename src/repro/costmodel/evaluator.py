@@ -24,20 +24,27 @@ offspring generation against the cache before costing only novel groups.
 Reference states (``repro.core.fusion_ref``) take the original frozenset-keyed
 path; both paths run the same float operations in the same order, so costs
 agree bit-for-bit (pinned by ``tests/test_fusion_equivalence.py``).
+
+Cost-backend note: the evaluator owns *memoization and fitness*, not the
+numbers — those come from a pluggable :class:`repro.costmodel.base.CostModel`
+(default: :class:`repro.costmodel.default.DefaultCostModel`, the paper's
+mini-Timeloop mapper; alternatives register via
+``repro.search.register_costmodel``).  The group caches store the scalar
+``CostBreakdown.totals()`` tuples, so swapping the backend never touches the
+batching machinery.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 from repro.core.fusion import FusionState, iter_bits
 from repro.core.graph import LayerGraph
-from repro.core.receptive import max_tile_rows
-from repro.core.toposort import member_order_ids, topological_sort_edges
 from repro.costmodel.accelerator import Accelerator
+from repro.costmodel.base import (CostBreakdown, CostModel, GroupKey,
+                                  GroupTotals)
+from repro.costmodel.default import DefaultCostModel
 from repro.costmodel.energy import DEFAULT_ENERGY, EnergyModel
-from repro.costmodel.mapper import LayerCost, map_layer
 
 _MISSING = object()
 
@@ -71,29 +78,70 @@ class ScheduleCost:
         return self.energy_pj * 1e-12
 
     def metric(self, objective: str) -> float:
-        return {"edp": self.edp, "energy": self.energy_pj,
-                "cycles": self.cycles,
-                "dram": float(self.dram_read_words + self.dram_write_words),
-                }[objective]
+        try:
+            return {"edp": self.edp, "energy": self.energy_pj,
+                    "cycles": self.cycles,
+                    "dram": float(self.dram_read_words
+                                  + self.dram_write_words),
+                    }[objective]
+        except KeyError:
+            raise ValueError(
+                f"unknown objective {objective!r}; ScheduleCost scores "
+                f"{', '.join(NATIVE_OBJECTIVES)} natively — register other "
+                f"metrics via repro.search.register_objective") from None
 
+    @classmethod
+    def from_groups(cls, groups: Sequence["GroupCost"], clock_hz: float
+                    ) -> "ScheduleCost":
+        """Declarative assembly from per-group totals tuples
+        (``CostBreakdown.totals()``), summed in schedule order."""
+        e = 0.0
+        c = 0.0
+        dr = dw = aw = mc = 0
+        for g in groups:
+            e += g[0]
+            c += g[1]
+            dr += g[2]
+            dw += g[3]
+            aw += g[4]
+            mc += g[5]
+        return cls(
+            energy_pj=e, cycles=c, dram_read_words=dr, dram_write_words=dw,
+            act_write_events=aw, macs=mc, n_groups=len(groups),
+            clock_hz=clock_hz)
 
-GroupKey = Union[int, FrozenSet[str]]
 
 # group cost record: (energy_pj, cycles, dram_read, dram_write,
 #                     act_write_events, macs) — or None if over-capacity
-GroupCost = Optional[Tuple[float, float, int, int, int, int]]
+# (the cached form of CostBreakdown.totals(); GroupKey/GroupTotals live in
+# repro.costmodel.base and are re-exported here for compatibility)
+GroupCost = GroupTotals
+
+
+#: what Evaluator accepts as its cost backend: a live CostModel, a factory
+#: ``(graph, acc, em) -> CostModel`` (e.g. the class itself), or None for
+#: the default model
+CostModelLike = Union[CostModel, Callable[..., CostModel], None]
 
 
 class Evaluator:
-    """Memoizing schedule evaluator for one (graph, accelerator) pair."""
+    """Memoizing schedule evaluator for one (graph, accelerator, costmodel)
+    triple."""
 
     def __init__(self, graph: LayerGraph, acc: Accelerator,
-                 em: EnergyModel = DEFAULT_ENERGY):
+                 em: EnergyModel = DEFAULT_ENERGY,
+                 costmodel: CostModelLike = None):
         self.graph = graph
         self.acc = acc
         self.em = em
         self.cg = graph.compiled()
-        self.clock_hz = acc.clock_mhz * 1e6
+        if costmodel is None:
+            self.costmodel: CostModel = DefaultCostModel(graph, acc, em)
+        elif isinstance(costmodel, CostModel):
+            self.costmodel = costmodel
+        else:
+            self.costmodel = costmodel(graph, acc, em)
+        self.clock_hz = self.costmodel.clock_hz
         self._group_cache: Dict[GroupKey, GroupCost] = {}
         # multi-member group mask -> cost delta vs its members' singleton
         # costs (the fast fitness path sums base + these corrections)
@@ -280,14 +328,26 @@ class Evaluator:
     def _group_cost(self, key: GroupKey) -> GroupCost:
         cached = self._group_cache.get(key, _MISSING)
         if cached is _MISSING:
-            cached = (self._compute_group_cost_mask(key)
-                      if isinstance(key, int)
-                      else self._compute_group_cost_members(key))
+            bd = self.costmodel.cost_group(key)
+            cached = None if bd is None else bd.totals()
             self._group_cache[key] = cached
             self.group_misses += 1
         else:
             self.group_hits += 1
         return cached
+
+    def breakdowns(self, state) -> Optional[List[CostBreakdown]]:
+        """Per-group :class:`CostBreakdown` for ``state``'s groups (in
+        group order), or None if the state is unschedulable / any group is
+        infeasible.  Recomputed through the cost model — this is the
+        reporting path (artifacts, ``repro report``), not the GA hot path.
+        """
+        if not state.is_schedulable():
+            return None
+        keys = state.group_masks() if hasattr(state, "group_masks") \
+            else state.groups()
+        out = self.costmodel.batch(keys)
+        return None if any(bd is None for bd in out) else out
 
     def cache_stats(self) -> Dict[str, float]:
         """Cache-effectiveness counters.  ``group_hit_rate`` covers explicit
@@ -312,110 +372,10 @@ class Evaluator:
     # ---- internals ------------------------------------------------------------------
     def _evaluate_keys(self, keys: Sequence[GroupKey]
                        ) -> Optional[ScheduleCost]:
-        e = 0.0
-        c = 0.0
-        dr = dw = aw = mc = 0
+        totals = []
         for key in keys:
             g = self._group_cost(key)
             if g is None:
                 return None
-            e += g[0]
-            c += g[1]
-            dr += g[2]
-            dw += g[3]
-            aw += g[4]
-            mc += g[5]
-        return ScheduleCost(
-            energy_pj=e, cycles=c, dram_read_words=dr, dram_write_words=dw,
-            act_write_events=aw, macs=mc, n_groups=len(keys),
-            clock_hz=self.clock_hz)
-
-    def _compute_group_cost_mask(self, gmask: int) -> GroupCost:
-        """Fast path: members given as a node bitmask, order and membership
-        tests all on integers."""
-        cg = self.cg
-        order = member_order_ids(cg.succ_ids, list(iter_bits(gmask)))
-        multi = sum(1 for i in order if cg.macs[i]) > 1
-
-        weight_passes = 1
-        if multi and len(order) > 1:
-            names_order = [cg.names[i] for i in order]
-            t = max_tile_rows(self.graph, names_order, self.acc.act_buf_words)
-            if t == 0:
-                return None                              # over-capacity: invalid
-            group_w = sum(cg.weight_size[i] for i in order)
-            if group_w > self.acc.weight_buf_words:
-                sink_p = max((cg.p[i] or 1) for i in order)
-                weight_passes = math.ceil(sink_p / t)
-
-        total = LayerCost()
-        compute_cycles = 0.0
-        dram_cycles = 0.0
-        for i in order:
-            preds = cg.pred_ids[i]
-            inputs_off = (not preds) or \
-                any(not (gmask >> p) & 1 for p in preds)
-            succs = cg.succ_ids[i]
-            outputs_off = (not succs) or \
-                any(not (gmask >> v) & 1 for v in succs)
-            lc = map_layer(cg.layers[i], self.acc, self.em,
-                           inputs_offchip=inputs_off,
-                           outputs_offchip=outputs_off,
-                           weight_stream_passes=weight_passes if multi else 1)
-            total += lc
-            compute_cycles += lc.compute_cycles
-            dram_cycles += lc.dram_cycles
-        # compute/DRAM overlap across the whole group pipeline
-        return (total.energy_pj, max(compute_cycles, dram_cycles),
-                total.dram_read_words, total.dram_write_words,
-                total.act_write_events, total.macs)
-
-    def _compute_group_cost_members(self, members: FrozenSet[str]
-                                    ) -> GroupCost:
-        """Reference path: members as a frozenset of layer names (used by
-        ``ReferenceFusionState``; kept operation-for-operation identical to
-        the fast path so both produce bit-equal costs)."""
-        g = self.graph
-        order = topological_sort_edges(
-            [n for n in g.names if n in members], g.edges)
-        multi = len([n for n in order if g.layers[n].macs]) > 1
-
-        weight_passes = 1
-        if multi and len(order) > 1:
-            t = max_tile_rows(g, order, self.acc.act_buf_words)
-            if t == 0:
-                return None                              # over-capacity: invalid
-            group_w = sum(g.layers[n].weight_size for n in order)
-            if group_w > self.acc.weight_buf_words:
-                sink_p = max((g.layers[n].p or 1) for n in order)
-                weight_passes = math.ceil(sink_p / t)
-
-        total = LayerCost()
-        compute_cycles = 0.0
-        dram_cycles = 0.0
-        for name in order:
-            layer = g.layers[name]
-            inputs_off = self._inputs_offchip(name, members)
-            outputs_off = self._outputs_offchip(name, members)
-            lc = map_layer(layer, self.acc, self.em,
-                           inputs_offchip=inputs_off,
-                           outputs_offchip=outputs_off,
-                           weight_stream_passes=weight_passes if multi else 1)
-            total += lc
-            compute_cycles += lc.compute_cycles
-            dram_cycles += lc.dram_cycles
-        return (total.energy_pj, max(compute_cycles, dram_cycles),
-                total.dram_read_words, total.dram_write_words,
-                total.act_write_events, total.macs)
-
-    def _inputs_offchip(self, name: str, members: FrozenSet[str]) -> bool:
-        preds = self.graph.preds(name)
-        if not preds:
-            return True                                  # graph input from DRAM
-        return any(p not in members for p in preds)
-
-    def _outputs_offchip(self, name: str, members: FrozenSet[str]) -> bool:
-        succ = self.graph.succs(name)
-        if not succ:
-            return True                                  # model output
-        return any(v not in members for v in succ)
+            totals.append(g)
+        return ScheduleCost.from_groups(totals, self.clock_hz)

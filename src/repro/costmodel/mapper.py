@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
+from typing import Optional
 
 from repro.core.graph import Layer
 from repro.costmodel.accelerator import Accelerator
@@ -37,29 +38,63 @@ def _util_dim(n: int, lanes: int) -> float:
     return n / (math.ceil(n / lanes) * lanes)
 
 
-def spatial_utilization(layer: Layer, acc: Accelerator) -> float:
+def _util_weight_stationary(layer: Layer, acc: Accelerator) -> float:
+    # SIMBA: M across PEs, C across per-PE vector MAC lanes.
+    cg = max(layer.c // layer.groups, 1)
+    return _util_dim(layer.m, acc.pe_count) * _util_dim(cg, acc.macs_per_pe)
+
+
+def _util_row_stationary(layer: Layer, acc: Accelerator) -> float:
+    # Eyeriss row-stationary: filter rows vertical (packing multiple
+    # filters when R < pe_y), output columns horizontal.
+    r = max(layer.r, 1)
+    if r <= acc.pe_y:
+        u_v = r * (acc.pe_y // r) / acc.pe_y
+    else:
+        u_v = _util_dim(r, acc.pe_y)
+    q = max(layer.q, 1)
+    return u_v * _util_dim(q, acc.pe_x)
+
+
+def resolve_dataflow(layer: Layer, acc: Accelerator) -> str:
+    """The concrete dataflow executing ``layer`` on ``acc``.
+
+    Fixed-dataflow machines return their dataflow unchanged; a FlexNN-style
+    ``flexible`` array (arXiv 2403.09026) reconfigures per layer, so the
+    mapper picks whichever fixed dataflow utilizes the array better on this
+    shape (weight-stationary wins ties — it is the cheaper reconfiguration
+    target on SIMBA-class datapaths)."""
+    if acc.dataflow != "flexible":
+        return acc.dataflow
+    if _util_weight_stationary(layer, acc) >= _util_row_stationary(layer, acc):
+        return "weight_stationary"
+    return "row_stationary"
+
+
+def spatial_utilization(layer: Layer, acc: Accelerator,
+                        dataflow: Optional[str] = None) -> float:
+    """Fraction of the PE array ``layer`` keeps busy.  ``dataflow`` lets a
+    caller that already resolved a flexible machine's per-layer choice
+    (``map_layer``) skip re-resolving it."""
     if layer.kind not in ("conv", "dwconv", "fc"):
         return 1.0
-    cg = max(layer.c // layer.groups, 1)
-    if acc.dataflow == "weight_stationary":
-        # SIMBA: M across PEs, C across per-PE vector MAC lanes.
-        u = _util_dim(layer.m, acc.pe_count) * _util_dim(cg, acc.macs_per_pe)
+    if dataflow is None:
+        dataflow = resolve_dataflow(layer, acc)
+    if dataflow == "weight_stationary":
+        u = _util_weight_stationary(layer, acc)
     else:
-        # Eyeriss row-stationary: filter rows vertical (packing multiple
-        # filters when R < pe_y), output columns horizontal.
-        r = max(layer.r, 1)
-        if r <= acc.pe_y:
-            u_v = r * (acc.pe_y // r) / acc.pe_y
-        else:
-            u_v = _util_dim(r, acc.pe_y)
-        q = max(layer.q, 1)
-        u = u_v * _util_dim(q, acc.pe_x)
+        u = _util_row_stationary(layer, acc)
     return max(u, 1.0 / acc.peak_macs_per_cycle)
 
 
 @dataclass
 class LayerCost:
-    """Cost of one layer under one mapping.  Energies in pJ, time in cycles."""
+    """Cost of one layer under one mapping.  Energies in pJ, time in cycles.
+
+    ``energy_terms`` names the components summed into ``energy_pj`` (for
+    :class:`repro.costmodel.base.CostBreakdown` reporting); accumulation
+    via ``+=`` merges them term-wise.
+    """
     energy_pj: float = 0.0
     compute_cycles: float = 0.0
     dram_cycles: float = 0.0
@@ -68,6 +103,7 @@ class LayerCost:
     act_write_events: int = 0     # distinct activation tensors written to DRAM
     macs: int = 0
     utilization: float = 1.0
+    energy_terms: dict = field(default_factory=dict)
 
     @property
     def cycles(self) -> float:
@@ -82,6 +118,8 @@ class LayerCost:
         self.dram_write_words += other.dram_write_words
         self.act_write_events += other.act_write_events
         self.macs += other.macs
+        for k, v in other.energy_terms.items():
+            self.energy_terms[k] = self.energy_terms.get(k, 0.0) + v
         return self
 
 
@@ -137,8 +175,9 @@ def map_layer(layer: Layer, acc: Accelerator,
     cost.dram_write_words = dram_w
 
     # ---- on-chip traffic -------------------------------------------------------------
+    df = resolve_dataflow(layer, acc)       # once per call; flexible machines
     cg = max(layer.c // max(layer.groups, 1), 1)
-    if acc.dataflow == "weight_stationary":
+    if df == "weight_stationary":
         in_amort = min(max(layer.m // max(layer.groups, 1), 1), acc.macs_per_pe)
         w_amort = min(max(layer.p * layer.q, 1), 1024)
     else:
@@ -151,18 +190,22 @@ def map_layer(layer: Layer, acc: Accelerator,
     wbuf_reads = layer.macs / max(w_amort, 1)
     wbuf_writes = W * max(weight_stream_passes, 1)
 
-    energy = (
-        layer.macs * em.e_mac
-        + 3.0 * layer.macs * em.e_rf                      # in, w, psum regs
-        + (act_reads + act_writes) * e_ab
-        + (wbuf_reads + wbuf_writes) * e_wb
-        + (act_reads + wbuf_reads) * 0.5 * em.e_noc       # array distribution
-        + (dram_r + dram_w) * em.e_dram
-    )
-    cost.energy_pj = energy
+    terms = {
+        "mac": layer.macs * em.e_mac,
+        "rf": 3.0 * layer.macs * em.e_rf,                 # in, w, psum regs
+        "act_buf": (act_reads + act_writes) * e_ab,
+        "weight_buf": (wbuf_reads + wbuf_writes) * e_wb,
+        "noc": (act_reads + wbuf_reads) * 0.5 * em.e_noc,  # array distribution
+        "dram": (dram_r + dram_w) * em.e_dram,
+    }
+    # summed term-by-term in the historical expression order: energy_pj is
+    # bit-identical to the pre-breakdown single-expression sum
+    cost.energy_pj = (terms["mac"] + terms["rf"] + terms["act_buf"]
+                      + terms["weight_buf"] + terms["noc"] + terms["dram"])
+    cost.energy_terms = terms
 
     # ---- time ------------------------------------------------------------------------
-    util = spatial_utilization(layer, acc)
+    util = spatial_utilization(layer, acc, df)
     cost.utilization = util
     if layer.macs:
         cost.compute_cycles = layer.macs / (acc.peak_macs_per_cycle * util)

@@ -86,12 +86,17 @@ class TpuCost:
         return max(t, key=t.get)
 
 
-# pJ per unit, TPU-class estimates (Jouppi et al., datacenter-accelerator
+# J per unit, TPU-class estimates (Jouppi et al., datacenter-accelerator
 # energy surveys): ~0.3 pJ/FLOP bf16 system-level, ~10 pJ/byte HBM,
-# ~25 pJ/byte chip-to-chip
-_E_FLOP = 0.3e-12
-_E_HBM = 10e-12
-_E_ICI = 25e-12
+# ~25 pJ/byte chip-to-chip.  Public names: the fusion-side TPU cost model
+# (repro.costmodel.tpu_fusion) prices CNN schedules with the same constants.
+E_FLOP_J = 0.3e-12
+E_HBM_J_PER_BYTE = 10e-12
+E_ICI_J_PER_BYTE = 25e-12
+
+_E_FLOP = E_FLOP_J
+_E_HBM = E_HBM_J_PER_BYTE
+_E_ICI = E_ICI_J_PER_BYTE
 
 
 def estimate(cfg: ModelConfig, shape: ShapeConfig, sched: TpuSchedule,

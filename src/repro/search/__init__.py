@@ -18,10 +18,15 @@ or, declaratively (what the CLI and a scheduler service speak):
 Layers:
 
 * **registries** — string-keyed workloads / accelerators / objectives /
-  backends with ``@register_*`` decorators (one function = one new entry);
+  backends / costmodels with ``@register_*`` decorators (one function =
+  one new entry); accelerators come from the hierarchical ``repro.hw``
+  catalog;
 * **backends** — strategies over the :class:`repro.core.problem.
   SearchProblem` protocol: ``ga`` (paper Alg. 1, reference), ``random``,
   ``hill_climb``, ``exhaustive``;
+* **costmodels** — cost backends over the :class:`repro.costmodel.base.
+  CostModel` protocol: ``default`` (the paper's mini-Timeloop mapper),
+  ``tpu`` (the TPU roofline retarget);
 * **spec -> session -> artifact** — a frozen :class:`SearchSpec`, a
   :class:`SearchSession` driving the backend with progress/early-stop
   hooks, and a JSON-round-trippable :class:`ScheduleArtifact` carrying the
@@ -38,20 +43,23 @@ from repro.search.artifact import (FingerprintMismatch, ScheduleArtifact,
 from repro.search.backends import (BackendError, ExhaustiveBackend,
                                    GABackend, HillClimbBackend,
                                    RandomBackend, SearchBackend)
-from repro.search.registry import (ACCELERATORS, BACKENDS, OBJECTIVES,
-                                   WORKLOADS, Registry, RegistryError,
-                                   build_accelerator, build_workload,
+from repro.search.registry import (ACCELERATORS, BACKENDS, COSTMODELS,
+                                   OBJECTIVES, WORKLOADS, Registry,
+                                   RegistryError, build_accelerator,
+                                   build_costmodel, build_workload,
                                    register_accelerator, register_backend,
-                                   register_objective, register_workload)
+                                   register_costmodel, register_objective,
+                                   register_workload)
 from repro.search.session import Progress, SearchSession, search
 from repro.search.spec import SearchSpec
 
 __all__ = [
-    "ACCELERATORS", "BACKENDS", "OBJECTIVES", "WORKLOADS",
+    "ACCELERATORS", "BACKENDS", "COSTMODELS", "OBJECTIVES", "WORKLOADS",
     "BackendError", "ExhaustiveBackend", "FingerprintMismatch", "GABackend",
     "HillClimbBackend", "Progress", "RandomBackend", "Registry",
     "RegistryError", "ScheduleArtifact", "SearchBackend", "SearchSession",
-    "SearchSpec", "build_accelerator", "build_workload", "graph_fingerprint",
-    "register_accelerator", "register_backend", "register_objective",
-    "register_workload", "search",
+    "SearchSpec", "build_accelerator", "build_costmodel", "build_workload",
+    "graph_fingerprint", "register_accelerator", "register_backend",
+    "register_costmodel", "register_objective", "register_workload",
+    "search",
 ]

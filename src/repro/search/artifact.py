@@ -21,6 +21,7 @@ from typing import Any, Dict, List, Optional
 from repro.core.fusion import FusionState
 from repro.core.graph import LayerGraph
 from repro.core.schedule import ImprovementRatios
+from repro.costmodel.base import CostBreakdown
 from repro.costmodel.evaluator import ScheduleCost
 
 from repro.search.spec import SearchSpec
@@ -72,6 +73,9 @@ class ScheduleArtifact(ImprovementRatios):
     offspring_evaluated: int = 0
     wall_s: float = 0.0
     backend_stats: Dict[str, Any] = field(default_factory=dict)
+    #: per-group CostBreakdown of the winning schedule (group order),
+    #: so reports can show where energy/cycles go without re-costing
+    group_breakdowns: List[CostBreakdown] = field(default_factory=list)
     created_unix: int = 0
     version: int = ARTIFACT_VERSION
 
@@ -80,6 +84,7 @@ class ScheduleArtifact(ImprovementRatios):
             "workload": self.spec.workload,
             "accelerator": self.spec.accelerator,
             "backend": self.spec.backend,
+            "costmodel": self.spec.costmodel,
             "seed": self.spec.seed,
             "energy_x": round(self.energy_improvement, 3),
             "edp_x": round(self.edp_improvement, 3),
@@ -131,6 +136,8 @@ class ScheduleArtifact(ImprovementRatios):
             "offspring_evaluated": self.offspring_evaluated,
             "wall_s": self.wall_s,
             "backend_stats": self.backend_stats,
+            "group_breakdowns": [bd.to_dict()
+                                 for bd in self.group_breakdowns],
         }
 
     @classmethod
@@ -153,6 +160,8 @@ class ScheduleArtifact(ImprovementRatios):
             offspring_evaluated=d.get("offspring_evaluated", 0),
             wall_s=d.get("wall_s", 0.0),
             backend_stats=d.get("backend_stats", {}),
+            group_breakdowns=[CostBreakdown.from_dict(b)
+                              for b in d.get("group_breakdowns", [])],
             created_unix=d.get("created_unix", 0),
         )
 
@@ -176,7 +185,8 @@ class ScheduleArtifact(ImprovementRatios):
 def make_artifact(spec: SearchSpec, graph: LayerGraph, result,
                   baseline: ScheduleCost, best: ScheduleCost,
                   wall_s: float = 0.0,
-                  backend_stats: Optional[Dict[str, Any]] = None
+                  backend_stats: Optional[Dict[str, Any]] = None,
+                  group_breakdowns: Optional[List[CostBreakdown]] = None
                   ) -> ScheduleArtifact:
     """Package a finished backend run (``result``: GAResult over fusion
     genomes) into a durable artifact."""
@@ -195,5 +205,6 @@ def make_artifact(spec: SearchSpec, graph: LayerGraph, result,
         offspring_evaluated=result.offspring_evaluated,
         wall_s=wall_s,
         backend_stats=dict(backend_stats or {}),
+        group_breakdowns=list(group_breakdowns or []),
         created_unix=int(time.time()),
     )

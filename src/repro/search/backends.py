@@ -242,9 +242,11 @@ class ExhaustiveBackend(SearchBackend):
         if size > limit:
             raise BackendError(
                 f"space of {size} genomes exceeds the exhaustive limit "
-                f"{limit}; raise it via backend_config {{\"limit\": "
-                f"{size}}} if enumeration is affordable, or use ga / "
-                f"hill_climb / random instead")
+                f"{limit}; pass limit={size} explicitly (API: "
+                f"backend_config={{\"limit\": {size}}}; CLI: "
+                f"--backend-config '{{\"limit\": {size}}}') if enumerating "
+                f"{size} states is affordable, or use ga / hill_climb / "
+                f"random instead")
         best, best_f = None, -1.0
         history: List[float] = []
         done, step = 0, 0

@@ -1,8 +1,9 @@
-"""String-keyed registries: workloads, accelerators, objectives, backends.
+"""String-keyed registries: workloads, accelerators, objectives, backends,
+cost models.
 
 Every extension point of the search facade is a named registry entry, so a
-new workload / accelerator template / objective / search strategy is one
-decorated function — not another entry-point script:
+new workload / accelerator / objective / search strategy / cost backend is
+one decorated function — not another entry-point script:
 
     from repro.search import register_workload
 
@@ -73,33 +74,51 @@ WORKLOADS = Registry("workload")
 ACCELERATORS = Registry("accelerator")
 OBJECTIVES = Registry("objective")
 BACKENDS = Registry("backend")
+COSTMODELS = Registry("costmodel")
 
 
-def register_workload(name: str, *, replace: bool = False):
-    """Decorator: register a ``(**kwargs) -> LayerGraph`` builder."""
-    return WORKLOADS.register(name, replace=replace)
+def register_workload(name: str, obj=None, *, replace: bool = False):
+    """Register a ``(**kwargs) -> LayerGraph`` builder (decorator when
+    ``obj`` is omitted)."""
+    return WORKLOADS.register(name, obj, replace=replace)
 
 
-def register_accelerator(name: str, *, replace: bool = False):
-    """Decorator: register a ``() -> Accelerator`` template factory."""
-    return ACCELERATORS.register(name, replace=replace)
+def register_accelerator(name: str, obj=None, *, replace: bool = False):
+    """Register a ``() -> Accelerator`` template factory (decorator when
+    ``obj`` is omitted)."""
+    return ACCELERATORS.register(name, obj, replace=replace)
 
 
-def register_objective(name: str, *, replace: bool = False):
-    """Decorator: register a ``(ScheduleCost) -> float`` metric (lower is
-    better; fitness is baseline_metric / candidate_metric)."""
-    return OBJECTIVES.register(name, replace=replace)
+def register_objective(name: str, obj=None, *, replace: bool = False):
+    """Register a ``(ScheduleCost) -> float`` metric (lower is better;
+    fitness is baseline_metric / candidate_metric).  Decorator when
+    ``obj`` is omitted."""
+    return OBJECTIVES.register(name, obj, replace=replace)
 
 
-def register_backend(name: str, *, replace: bool = False):
-    """Decorator: register a :class:`repro.search.backends.SearchBackend`
-    subclass (instantiated per session)."""
-    return BACKENDS.register(name, replace=replace)
+def register_backend(name: str, obj=None, *, replace: bool = False):
+    """Register a :class:`repro.search.backends.SearchBackend` subclass
+    (instantiated per session).  Decorator when ``obj`` is omitted."""
+    return BACKENDS.register(name, obj, replace=replace)
+
+
+def register_costmodel(name: str, obj=None, *, replace: bool = False):
+    """Register a :class:`repro.costmodel.base.CostModel` factory —
+    typically the class itself — called as
+    ``factory(graph, accelerator, energy_model) -> CostModel`` once per
+    search session.  Decorator when ``obj`` is omitted."""
+    return COSTMODELS.register(name, obj, replace=replace)
 
 
 def build_workload(name: str, **kwargs):
     """Build a registered workload's :class:`LayerGraph`."""
     return WORKLOADS.get(name)(**kwargs)
+
+
+def build_costmodel(name: str):
+    """Resolve a registered cost-model factory (not yet bound to a graph/
+    accelerator — the session binds it)."""
+    return COSTMODELS.get(name)
 
 
 _REPART = re.compile(r"^(?P<base>[\w.-]+)@act(?P<delta>[+-]\d+)$")
@@ -117,21 +136,28 @@ def build_accelerator(spec: str):
 
 def _install_builtins() -> None:
     """Populate the registries from the paper's tables (idempotent)."""
-    from repro.costmodel.accelerator import ARCHS
+    from repro.costmodel.default import DefaultCostModel
     from repro.costmodel.evaluator import NATIVE_OBJECTIVES
+    from repro.costmodel.tpu_fusion import TpuFusionCostModel
+    from repro.hw.catalog import ALL_SPECS
     from repro.workloads import WORKLOADS as _ZOO
 
     for wname, builder in _ZOO.items():
         if wname not in WORKLOADS:
             WORKLOADS.register(wname, builder)
-    for aname, acc in ARCHS.items():
+    for aname, spec in ALL_SPECS.items():
         if aname not in ACCELERATORS:
-            # bind the frozen template; repartition variants derive from it
-            ACCELERATORS.register(aname, (lambda a: lambda: a)(acc))
+            # the hierarchical description is the source of truth; the
+            # registry serves the flat view the mappers consume
+            # (repartition variants derive from it via the @act suffix)
+            ACCELERATORS.register(aname, (lambda s: s.to_accelerator)(spec))
     for obj in NATIVE_OBJECTIVES:
         if obj not in OBJECTIVES:
             OBJECTIVES.register(
                 obj, (lambda o: lambda cost: cost.metric(o))(obj))
+    for cm in (DefaultCostModel, TpuFusionCostModel):
+        if cm.name not in COSTMODELS:
+            COSTMODELS.register(cm.name, cm)
 
 
 _install_builtins()

@@ -24,7 +24,7 @@ from repro.costmodel.evaluator import NATIVE_OBJECTIVES, Evaluator
 from repro.search.artifact import ScheduleArtifact, make_artifact
 from repro.search.backends import BackendError
 from repro.search.registry import (BACKENDS, OBJECTIVES, build_accelerator,
-                                   build_workload)
+                                   build_costmodel, build_workload)
 from repro.search.spec import SearchSpec
 
 
@@ -83,12 +83,14 @@ class SearchSession:
                 f"SearchSpec.objective {spec.objective!r}")
         self.backend = BACKENDS.get(spec.backend)()
         OBJECTIVES.get(spec.objective)
+        costmodel_factory = build_costmodel(spec.costmodel)
         self.graph = graph if graph is not None else \
             build_workload(spec.workload, **spec.workload_kwargs)
         self.accelerator = accelerator if accelerator is not None else \
             build_accelerator(spec.accelerator)
         self.evaluator = Evaluator(self.graph, self.accelerator,
-                                   em or DEFAULT_ENERGY)
+                                   em or DEFAULT_ENERGY,
+                                   costmodel=costmodel_factory)
         if spec.objective in NATIVE_OBJECTIVES:
             self.problem = FusionProblem(self.graph, self.evaluator,
                                          spec.objective)
@@ -144,10 +146,12 @@ class SearchSession:
         best_cost = self.evaluator.evaluate(self.result.best_state)
         assert best_cost is not None, \
             "backend returned an invalid best state"
+        breakdowns = self.evaluator.breakdowns(self.result.best_state)
         self.artifact = make_artifact(
             self.spec, self.graph, self.result,
             baseline=self.evaluator.layerwise(), best=best_cost,
-            wall_s=wall_s, backend_stats=self.evaluator.cache_stats())
+            wall_s=wall_s, backend_stats=self.evaluator.cache_stats(),
+            group_breakdowns=breakdowns)
         return self.artifact
 
     # ---- compatibility ----------------------------------------------------------
@@ -164,7 +168,8 @@ class SearchSession:
 
 
 def search(workload: str, accelerator: str = "simba", *,
-           objective: str = "edp", backend: str = "ga", seed: int = 0,
+           objective: str = "edp", backend: str = "ga",
+           costmodel: str = "default", seed: int = 0,
            budget: Optional[int] = None, patience: Optional[int] = None,
            backend_config: Optional[dict] = None,
            workload_kwargs: Optional[dict] = None,
@@ -175,6 +180,7 @@ def search(workload: str, accelerator: str = "simba", *,
     evaluator/result objects afterwards."""
     spec = SearchSpec(workload=workload, accelerator=accelerator,
                       objective=objective, backend=backend,
+                      costmodel=costmodel,
                       backend_config=backend_config or {},
                       workload_kwargs=workload_kwargs or {},
                       seed=seed, budget=budget, patience=patience)

@@ -18,19 +18,23 @@ class SearchSpec:
     """What to search: (workload, accelerator, objective) — and how:
     (backend + config, seed, budget).
 
-    ``workload``/``accelerator``/``objective``/``backend`` are registry
-    names (``repro.search.registry``); ``accelerator`` may carry a
-    repartition suffix (``eyeriss@act+64``).  ``budget`` stops the search
-    at the end of the first backend step (generation/chunk) that reaches
-    this many offspring evaluations — the cap can overshoot by up to one
-    step's worth (None = backend default); ``patience`` stops after that
-    many steps without improvement (None = run the full budget).
+    ``workload``/``accelerator``/``objective``/``backend``/``costmodel``
+    are registry names (``repro.search.registry``); ``accelerator`` may
+    carry a repartition suffix (``eyeriss@act+64``); ``costmodel`` picks
+    the cost backend scoring the schedules (``default`` = the paper's
+    mini-Timeloop mapper, ``tpu`` = the TPU roofline).  ``budget`` stops
+    the search at the end of the first backend step (generation/chunk)
+    that reaches this many offspring evaluations — the cap can overshoot
+    by up to one step's worth (None = backend default); ``patience``
+    stops after that many steps without improvement (None = run the full
+    budget).
     """
 
     workload: str
     accelerator: str = "simba"
     objective: str = "edp"
     backend: str = "ga"
+    costmodel: str = "default"
     backend_config: Dict[str, Any] = field(default_factory=dict)
     workload_kwargs: Dict[str, Any] = field(default_factory=dict)
     seed: int = 0

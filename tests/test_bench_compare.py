@@ -1,0 +1,67 @@
+"""The perf-canary compare step (`benchmarks/compare.py`): pass/fail
+thresholds, metric addressing, and error handling."""
+import json
+import sys
+
+import pytest
+
+sys.path.insert(0, ".")                      # benchmarks/ is not a package dir
+from benchmarks.compare import compare, main  # noqa: E402
+
+
+def _report(path, evals_per_sec, name="ga_convergence"):
+    path.write_text(json.dumps({
+        "meta": {}, "rows": [],
+        "records": [{"name": name, "evals_per_sec": evals_per_sec,
+                     "wall_s": 1.0}],
+    }))
+    return str(path)
+
+
+def test_within_window_passes(tmp_path):
+    base = _report(tmp_path / "base.json", 10000.0)
+    now = _report(tmp_path / "now.json", 7500.0)      # -25% < 30% window
+    res = compare(base, now)
+    assert res["ok"] and res["change_frac"] == pytest.approx(-0.25)
+    assert main([base, now]) == 0
+
+
+def test_regression_beyond_window_fails(tmp_path):
+    base = _report(tmp_path / "base.json", 10000.0)
+    now = _report(tmp_path / "now.json", 6500.0)      # -35% > 30% window
+    assert not compare(base, now)["ok"]
+    assert main([base, now]) == 1
+    # a wider window from the CLI lets it through
+    assert main([base, now, "--max-regression", "0.5"]) == 0
+
+
+def test_improvement_always_passes(tmp_path):
+    base = _report(tmp_path / "base.json", 10000.0)
+    now = _report(tmp_path / "now.json", 25000.0)
+    assert compare(base, now)["ok"]
+
+
+def test_lower_is_better_flips_direction(tmp_path):
+    base = _report(tmp_path / "base.json", 1.0)
+    now = _report(tmp_path / "now.json", 1.5)         # +50% wall time
+    assert compare(base, now)["ok"]                   # higher-is-better: fine
+    assert not compare(base, now, lower_is_better=True)["ok"]
+
+
+def test_missing_record_or_field_is_a_clean_error(tmp_path):
+    base = _report(tmp_path / "base.json", 10000.0)
+    other = _report(tmp_path / "other.json", 1.0, name="kernels")
+    assert main([base, other]) == 2
+    assert main([base, other, "--metric", "ga_convergence"]) == 2  # no field
+    with pytest.raises(KeyError, match="no record named"):
+        compare(base, other)
+    with pytest.raises(KeyError, match="no field"):
+        compare(base, base, metric="ga_convergence:flops")
+
+
+def test_committed_baseline_is_loadable_and_self_consistent():
+    """BENCH_ga.json (the committed canary baseline) must stay parseable
+    and compare clean against itself."""
+    res = compare("BENCH_ga.json", "BENCH_ga.json")
+    assert res["ok"] and res["change_frac"] == 0.0
+    assert res["baseline"] > 0

@@ -1,0 +1,224 @@
+"""CostModel protocol: registry, CostBreakdown, TPU roofline backend,
+per-group breakdowns in artifacts/reports, and mapper bounds."""
+import json
+import math
+
+import pytest
+
+from repro.core.fusion import FusionState
+from repro.core.graph import Layer, LayerGraph
+from repro.costmodel import (CostBreakdown, CostModel, DefaultCostModel,
+                             Evaluator, ScheduleCost, SIMBA,
+                             TpuFusionCostModel, spatial_utilization)
+from repro.search import (ACCELERATORS, COSTMODELS, RegistryError,
+                          SearchSession, SearchSpec, build_accelerator,
+                          register_costmodel, search)
+from tests.test_fusion import chain
+
+
+# ---- registry ---------------------------------------------------------------------
+
+def test_builtin_costmodels_registered():
+    assert "default" in COSTMODELS and "tpu" in COSTMODELS
+    assert COSTMODELS.get("default") is DefaultCostModel
+    with pytest.raises(RegistryError, match="unknown costmodel"):
+        COSTMODELS.get("accelergy")
+
+
+def test_register_custom_costmodel_runs_end_to_end():
+    name = "test_unit_energy"
+    if name not in COSTMODELS:
+        @register_costmodel(name)
+        class UnitEnergyModel(DefaultCostModel):
+            """Energy = DRAM words only: a pure traffic objective."""
+            name_ = name
+
+            def cost_group(self, key):
+                bd = super().cost_group(key)
+                if bd is None:
+                    return None
+                traffic = float(bd.dram_read_words + bd.dram_write_words)
+                return CostBreakdown(
+                    energy_pj=traffic,
+                    compute_cycles=bd.compute_cycles,
+                    dram_cycles=bd.dram_cycles,
+                    dram_read_words=bd.dram_read_words,
+                    dram_write_words=bd.dram_write_words,
+                    act_write_events=bd.act_write_events,
+                    macs=bd.macs, members=bd.members,
+                    energy_terms={"dram_words": traffic})
+    art = search("mobilenet_v3", "simba", costmodel=name, backend="ga",
+                 backend_config={"preset": "fast", "generations": 3}, seed=0)
+    assert art.spec.costmodel == name
+    # energy now *is* dram traffic, word for word
+    assert art.best.energy_pj == pytest.approx(
+        art.best.dram_read_words + art.best.dram_write_words)
+
+
+def test_spec_rejects_unknown_costmodel_at_session_creation():
+    with pytest.raises(RegistryError, match="unknown costmodel"):
+        SearchSession(SearchSpec(workload="mobilenet_v3",
+                                 costmodel="timeloop9000"))
+
+
+# ---- CostBreakdown ----------------------------------------------------------------
+
+def test_breakdown_totals_and_round_trip():
+    bd = CostBreakdown(energy_pj=10.0, compute_cycles=5.0, dram_cycles=7.0,
+                       dram_read_words=100, dram_write_words=50,
+                       act_write_events=2, macs=1000,
+                       members=("a", "b"), tile_rows=4, weight_passes=2,
+                       utilization=0.5, energy_terms={"mac": 4.0, "dram": 6.0})
+    assert bd.cycles == 7.0                      # max(compute, dram)
+    assert bd.edp == 70.0
+    assert bd.totals() == (10.0, 7.0, 100, 50, 2, 1000)
+    again = CostBreakdown.from_dict(json.loads(json.dumps(bd.to_dict())))
+    assert again == bd
+
+
+def test_default_model_breakdowns_sum_to_schedule_cost():
+    g = chain(5)
+    ev = Evaluator(g, SIMBA)
+    state = FusionState.fully_fused(g)
+    cost = ev.evaluate(state)
+    bds = ev.breakdowns(state)
+    assert cost is not None and bds is not None
+    assert len(bds) == cost.n_groups
+    assert sum(b.energy_pj for b in bds) == pytest.approx(cost.energy_pj,
+                                                          rel=1e-12)
+    assert sum(b.cycles for b in bds) == pytest.approx(cost.cycles,
+                                                       rel=1e-12)
+    assert sum(b.macs for b in bds) == cost.macs
+    for b in bds:
+        # declarative terms decompose the total exactly
+        assert sum(b.energy_terms.values()) == pytest.approx(b.energy_pj,
+                                                             rel=1e-12)
+        assert set(b.energy_terms) == {"mac", "rf", "act_buf", "weight_buf",
+                                       "noc", "dram"}
+        assert 0.0 < b.utilization <= 1.0
+
+
+def test_breakdowns_none_for_unschedulable_state():
+    from tests.test_fusion import skip_graph
+    g = skip_graph()
+    ev = Evaluator(g, SIMBA)
+    s = FusionState(g, frozenset({("a", "add")}))
+    assert ev.breakdowns(s) is None
+
+
+# ---- TPU roofline backend ---------------------------------------------------------
+
+def test_tpu_model_fusion_saves_hbm_traffic():
+    g = chain(4)
+    ev = Evaluator(g, SIMBA, costmodel=TpuFusionCostModel)
+    base = ev.layerwise()
+    fused = ev.evaluate(FusionState.fully_fused(g))
+    assert fused is not None
+    assert fused.energy_pj < base.energy_pj
+    total = lambda c: c.dram_read_words + c.dram_write_words
+    assert total(fused) < total(base)
+    assert fused.macs == base.macs
+    # TPU clock, not the edge machine's 200 MHz
+    assert base.clock_hz == pytest.approx(940e6)
+
+
+def test_tpu_model_vmem_capacity_invalidates_giant_tiles():
+    g = LayerGraph("huge")
+    i = g.add(Layer(name="input", kind="input", m=2048, p=1024, q=1024))
+    a = g.add(Layer(name="a", kind="conv", c=2048, h=1024, w=1024, m=2048,
+                    p=1024, q=1024, r=3, s=3, padding=(1, 1)), [i])
+    g.add(Layer(name="b", kind="conv", c=2048, h=1024, w=1024, m=2048,
+                p=1024, q=1024, r=3, s=3, padding=(1, 1)), [a])
+    ev = Evaluator(g, SIMBA, costmodel=TpuFusionCostModel)
+    assert ev.evaluate(FusionState.fully_fused(g)) is None
+    assert ev.fitness(FusionState.fully_fused(g)) == 0.0
+
+
+def test_tpu_model_reference_and_bitmask_paths_agree():
+    from repro.core.fusion_ref import ReferenceFusionState
+    g = chain(5)
+    ev_new = Evaluator(g, SIMBA, costmodel=TpuFusionCostModel)
+    ev_ref = Evaluator(g, SIMBA, costmodel=TpuFusionCostModel)
+    for fused in (frozenset(), frozenset({("c0", "c1")}),
+                  frozenset(g.edges)):
+        new = ev_new.evaluate(FusionState(g, fused))
+        ref = ev_ref.evaluate(ReferenceFusionState(g, fused))
+        assert new == ref
+
+
+def test_cli_costmodel_tpu_end_to_end(tmp_path):
+    from repro.__main__ import main
+    out = tmp_path / "tpu.json"
+    rc = main(["search", "--workload", "mobilenet_v3", "--accelerator",
+               "flexnn", "--costmodel", "tpu", "--backend", "ga",
+               "--preset", "fast", "--generations", "3", "--out", str(out)])
+    assert rc == 0
+    data = json.loads(out.read_text())
+    assert data["spec"]["costmodel"] == "tpu"
+    assert data["group_breakdowns"], "artifact must store breakdowns"
+    assert main(["report", str(out), "--breakdown"]) == 0
+    # unknown costmodel is a clean CLI error, not a traceback
+    assert main(["search", "--workload", "mobilenet_v3", "--costmodel",
+                 "nope", "--out", str(out)]) == 2
+
+
+# ---- artifact / report ------------------------------------------------------------
+
+def test_artifact_round_trips_group_breakdowns(tmp_path):
+    art = search("mobilenet_v3", "simba", backend="ga", seed=0,
+                 backend_config={"preset": "fast", "generations": 3})
+    assert len(art.group_breakdowns) == art.best.n_groups
+    path = tmp_path / "a.json"
+    art.save(str(path))
+    from repro.search import ScheduleArtifact
+    loaded = ScheduleArtifact.load(str(path))
+    assert loaded.group_breakdowns == art.group_breakdowns
+    assert sum(b.energy_pj for b in loaded.group_breakdowns) == \
+        pytest.approx(art.best.energy_pj, rel=1e-12)
+
+
+def test_breakdown_report_renders():
+    from repro.core.report import breakdown_report
+    art = search("mobilenet_v3", "simba", backend="ga", seed=0,
+                 backend_config={"preset": "fast", "generations": 3})
+    text = breakdown_report(art.group_breakdowns, max_rows=5)
+    assert "energy%" in text and "more groups" in text
+    full = breakdown_report(art.group_breakdowns, max_rows=0)
+    assert len(full.splitlines()) == len(art.group_breakdowns) + 1
+    assert breakdown_report([]).startswith("(artifact stores no")
+
+
+# ---- mapper bounds (satellite) ----------------------------------------------------
+
+def test_spatial_utilization_bounded_across_zoo_and_machines():
+    """u in (0, 1] for every layer of every zoo workload on every
+    registered accelerator."""
+    from repro.workloads import WORKLOADS as ZOO
+    for wname, builder in ZOO.items():
+        g = builder()
+        for aname in ACCELERATORS:
+            acc = build_accelerator(aname)
+            for layer in g.layers.values():
+                u = spatial_utilization(layer, acc)
+                assert 0.0 < u <= 1.0, (wname, aname, layer.name, u)
+
+
+def test_schedule_cost_metric_rejects_unknown_objective():
+    g = chain(3)
+    cost = Evaluator(g, SIMBA).layerwise()
+    with pytest.raises(ValueError) as e:
+        cost.metric("latency_per_dollar")
+    msg = str(e.value)
+    assert "latency_per_dollar" in msg
+    assert "edp" in msg and "register_objective" in msg
+
+
+def test_costmodel_protocol_is_abstract():
+    g = chain(3)
+    cm = CostModel(g, SIMBA)
+    with pytest.raises(NotImplementedError):
+        cm.cost_group(1)
+    with pytest.raises(NotImplementedError):
+        cm.cost_layer(g.layers["c0"])
+    assert cm.member_names(frozenset({"c1", "c0"})) == ["c0", "c1"]
+    assert cm.member_names(0b11) == ["input", "c0"]

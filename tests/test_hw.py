@@ -1,0 +1,208 @@
+"""`repro.hw`: hierarchical hardware descriptions, catalog round-trips,
+repartition invariants, and the flexible-dataflow mapper support."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.costmodel import EYERISS, SIMBA, SIMBA2X2
+from repro.costmodel.mapper import resolve_dataflow, spatial_utilization
+from repro.core.graph import Layer
+from repro.hw import (ALL_SPECS, ComputeArray, EYERISS_HW, FLEXNN_HW,
+                      HardwareError, HardwareSpec, MemLevel, SIMBA2X2_HW,
+                      SIMBA_HW, get_spec)
+
+
+# ---- catalog / flat-view equivalence ----------------------------------------------
+
+def test_table_i_specs_round_trip_to_legacy_constants():
+    """The hierarchical Table-I descriptions produce exactly the flat
+    machines the evaluator always costed — the refactor changes how
+    machines are *expressed*, not what they cost."""
+    assert EYERISS_HW.to_accelerator() == EYERISS
+    assert SIMBA_HW.to_accelerator() == SIMBA
+    assert SIMBA2X2_HW.to_accelerator() == SIMBA2X2
+
+
+def test_catalog_has_new_machines():
+    assert {"eyeriss", "simba", "simba2x2", "simba4x4", "flexnn"} <= \
+        set(ALL_SPECS)
+    s4 = get_spec("simba4x4")
+    assert s4.compute.pe_count == 16 * SIMBA_HW.compute.pe_count
+    assert s4.level("act_buf").capacity_kib == \
+        16 * SIMBA_HW.level("act_buf").capacity_kib
+    assert FLEXNN_HW.dataflow == "flexible"
+    with pytest.raises(KeyError, match="unknown hardware spec"):
+        get_spec("nope")
+
+
+def test_registry_serves_catalog_machines():
+    from repro.search import ACCELERATORS, build_accelerator
+    for name in ALL_SPECS:
+        assert name in ACCELERATORS
+        assert build_accelerator(name) == ALL_SPECS[name].to_accelerator()
+    flex = build_accelerator("flexnn@act+32")
+    assert flex.act_buf_kib == 160 and flex.weight_buf_kib == 480
+
+
+def test_spec_dict_round_trip():
+    for spec in ALL_SPECS.values():
+        again = HardwareSpec.from_dict(spec.to_dict())
+        assert again == spec
+
+
+def test_register_accelerator_accepts_positional_factory():
+    """The README's 20-line example form: register(name, factory) — not
+    only the decorator form."""
+    from repro.search import ACCELERATORS, build_accelerator, \
+        register_accelerator
+    name = "test_mychip"
+    if name not in ACCELERATORS:
+        import dataclasses
+        spec = dataclasses.replace(SIMBA_HW, name=name)
+        register_accelerator(name, spec.to_accelerator)
+    assert build_accelerator(name).pe_count == SIMBA_HW.compute.pe_count
+
+
+def test_to_accelerator_rejects_fractional_buffer_kib():
+    import dataclasses
+    frac = dataclasses.replace(
+        SIMBA_HW, name="frac",
+        levels=tuple(
+            dataclasses.replace(lv, capacity_kib=lv.capacity_kib + 0.5)
+            if lv.name == "act_buf" else lv
+            for lv in SIMBA_HW.levels))
+    with pytest.raises(HardwareError, match="whole KiB"):
+        frac.to_accelerator()
+    sub = dataclasses.replace(
+        SIMBA_HW, name="sub",
+        levels=tuple(
+            dataclasses.replace(lv, capacity_kib=0.25)
+            if lv.name == "act_buf" else lv
+            for lv in SIMBA_HW.levels))
+    with pytest.raises(HardwareError, match="whole KiB"):
+        sub.to_accelerator()
+
+
+# ---- validation -------------------------------------------------------------------
+
+def _levels(**caps):
+    base = {"dram": math.inf, "weight_buf": 512, "act_buf": 64}
+    base.update(caps)
+    return tuple(
+        MemLevel(n, c, bandwidth_gbps=128.0 if n == "dram" else 0.0)
+        for n, c in base.items())
+
+
+def test_spec_requires_core_levels_and_valid_dataflow():
+    good = HardwareSpec("m", ComputeArray(4, 4, 8), _levels(),
+                        "weight_stationary")
+    assert good.to_accelerator().pe_count == 16
+    with pytest.raises(HardwareError, match="missing required"):
+        HardwareSpec("m", ComputeArray(4, 4, 8), good.levels[:2],
+                     "weight_stationary")
+    with pytest.raises(HardwareError, match="unknown dataflow"):
+        HardwareSpec("m", ComputeArray(4, 4, 8), _levels(), "zigzag")
+    with pytest.raises(HardwareError, match="duplicate"):
+        HardwareSpec("m", ComputeArray(4, 4, 8),
+                     good.levels + (MemLevel("act_buf", 8),),
+                     "weight_stationary")
+    with pytest.raises(HardwareError, match="positive"):
+        MemLevel("act_buf", 0)
+    with pytest.raises(HardwareError, match="positive"):
+        ComputeArray(0, 4, 8)
+    with pytest.raises(HardwareError, match="bandwidth"):
+        HardwareSpec(
+            "m", ComputeArray(4, 4, 8),
+            (MemLevel("dram", math.inf), MemLevel("weight_buf", 512),
+             MemLevel("act_buf", 64)),
+            "weight_stationary")
+
+
+# ---- repartition invariants (satellite) -------------------------------------------
+
+@given(st.integers(min_value=-500, max_value=1000))
+@settings(max_examples=80, deadline=None)
+def test_accelerator_repartition_preserves_capacity_or_rejects(delta):
+    """Fig.-11 repartitioning is iso-capacity by construction; any delta
+    that would drive a buffer non-positive must be refused, everything
+    else must conserve total on-chip buffer KiB."""
+    total = EYERISS.act_buf_kib + EYERISS.weight_buf_kib
+    if (EYERISS.act_buf_kib + delta <= 0
+            or EYERISS.weight_buf_kib - delta <= 0):
+        with pytest.raises(ValueError, match="positive"):
+            EYERISS.repartition(delta)
+    else:
+        re = EYERISS.repartition(delta)
+        assert re.act_buf_kib + re.weight_buf_kib == total
+        assert re.act_buf_kib > 0 and re.weight_buf_kib > 0
+
+
+@given(st.sampled_from(sorted(ALL_SPECS)),
+       st.integers(min_value=-3000, max_value=9000))
+@settings(max_examples=80, deadline=None)
+def test_hwspec_repartition_preserves_capacity_or_rejects(name, delta):
+    spec = ALL_SPECS[name]
+    act = spec.level("act_buf").capacity_kib
+    wgt = spec.level("weight_buf").capacity_kib
+    if act + delta <= 0 or wgt - delta <= 0:
+        with pytest.raises(HardwareError):
+            spec.repartition(delta)
+    else:
+        re = spec.repartition(delta)
+        assert re.onchip_capacity_kib == spec.onchip_capacity_kib
+        assert re.level("act_buf").capacity_kib == act + delta
+        assert re.level("weight_buf").capacity_kib == wgt - delta
+        # the flat view agrees with the flat repartition path
+        assert re.to_accelerator() == \
+            spec.to_accelerator().repartition(int(delta))
+
+
+# ---- flexible dataflow ------------------------------------------------------------
+
+FLEX = FLEXNN_HW.to_accelerator()
+
+
+def _conv(m=64, c=64, hw=16, k=1, groups=1, kind="conv"):
+    return Layer(name="l", kind=kind, c=c, h=hw, w=hw, m=m, p=hw, q=hw,
+                 r=k, s=k, padding=(k // 2, k // 2), groups=groups)
+
+
+def test_fixed_machines_resolve_their_own_dataflow():
+    l = _conv()
+    assert resolve_dataflow(l, SIMBA) == "weight_stationary"
+    assert resolve_dataflow(l, EYERISS) == "row_stationary"
+
+
+def test_flexible_picks_per_layer_and_dominates_fixed():
+    import dataclasses
+    ws = dataclasses.replace(FLEX, dataflow="weight_stationary")
+    rs = dataclasses.replace(FLEX, dataflow="row_stationary")
+    # depthwise starves the C-parallel MAC lanes -> row-stationary wins
+    dw = _conv(m=64, c=64, k=3, groups=64, kind="dwconv")
+    assert resolve_dataflow(dw, FLEX) == "row_stationary"
+    # fat pointwise conv keeps every lane busy -> weight-stationary wins
+    pw = _conv(m=64, c=64, k=1)
+    assert resolve_dataflow(pw, FLEX) == "weight_stationary"
+    for layer in (dw, pw, _conv(m=16, c=8, k=3)):
+        u_flex = spatial_utilization(layer, FLEX)
+        assert u_flex == pytest.approx(
+            max(spatial_utilization(layer, ws),
+                spatial_utilization(layer, rs)))
+
+
+def test_flexnn_search_beats_or_matches_its_fixed_dataflows():
+    """End-to-end: on MobileNet-v3 (depthwise-heavy) the flexible array's
+    baseline EDP is no worse than the same array frozen to either fixed
+    dataflow."""
+    from repro.costmodel import Evaluator
+    from repro.workloads import mobilenet_v3_large
+    import dataclasses
+    g = mobilenet_v3_large()
+    edp = {}
+    for df in ("flexible", "weight_stationary", "row_stationary"):
+        acc = dataclasses.replace(FLEX, dataflow=df)
+        edp[df] = Evaluator(g, acc).layerwise().edp
+    assert edp["flexible"] <= edp["weight_stationary"] * (1 + 1e-12)
+    assert edp["flexible"] <= edp["row_stationary"] * (1 + 1e-12)

@@ -156,6 +156,24 @@ def test_exhaustive_refuses_oversized_space():
         search("mobilenet_v3", "simba", backend="exhaustive")
 
 
+def test_exhaustive_guard_names_the_exact_limit_to_pass():
+    """The guard error must hand the user the exact ``limit=`` that makes
+    the run go (VGG-16: 21 fusion edges -> 2^21 states, not the paper's
+    2^16 over conv layers)."""
+    from repro.workloads import vgg16
+    n_edges = vgg16().compiled().m
+    size = 1 << n_edges
+    with pytest.raises(BackendError) as e:
+        search("vgg16", "simba", backend="exhaustive")
+    msg = str(e.value)
+    assert f"limit={size}" in msg
+    assert f'{{"limit": {size}}}' in msg        # copy-pasteable config form
+    # and passing that limit actually runs (budget keeps the test cheap)
+    art = search("vgg16", "simba", backend="exhaustive", budget=256,
+                 backend_config={"limit": size})
+    assert art.best_fitness >= 1.0
+
+
 def test_tpu_search_accepts_ga_backend_config():
     from repro.configs import get_config
     from repro.configs.base import SHAPES
@@ -237,6 +255,28 @@ def test_session_patience_stops_on_plateau():
 
 
 # ---- compatibility with pre-facade entry points -----------------------------------
+
+def test_fixed_seed_search_pinned_across_cost_refactor():
+    """The default cost path is pinned bit-for-bit to the pre-protocol
+    evaluator: this exact genome/fitness/ScheduleCost was captured on the
+    monolithic evaluator (MobileNet-v3 / SIMBA, GAConfig.fast, 10 gens,
+    seed 0) immediately before the CostModel refactor.  If this test
+    moves, the cost refactor changed the numbers — that is a bug, not a
+    baseline to update."""
+    art = search("mobilenet_v3", "simba", backend="ga", seed=0,
+                 backend_config={"preset": "fast", "generations": 10})
+    assert art.genome_mask == 0x201001041010040240204cb6
+    assert art.best_fitness == pytest.approx(1.2652706202341535, rel=1e-12)
+    best, base = art.best, art.baseline
+    assert best.energy_pj == pytest.approx(1755041471.5753305, rel=1e-12)
+    assert best.cycles == pytest.approx(1624290.35, rel=1e-12)
+    assert (best.dram_read_words, best.dram_write_words) == (9325910, 3133582)
+    assert (best.act_write_events, best.n_groups) == (74, 74)
+    assert base.energy_pj == pytest.approx(2217672703.57533, rel=1e-12)
+    assert base.cycles == pytest.approx(1626436.1562500002, rel=1e-12)
+    assert (base.dram_read_words, base.dram_write_words) == \
+        (11625270, 5432942)
+
 
 def test_optimize_shim_matches_direct_ga_run():
     """core.schedule.optimize routes through repro.search and stays
