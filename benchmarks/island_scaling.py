@@ -1,0 +1,50 @@
+"""Island-model GA scaling: aggregate search throughput at 1/2/4 islands.
+
+Runs the ``island`` backend on MobileNet-v3 / SIMBA at a fixed seed and
+emits ``evals_per_sec`` (total offspring evaluated across all islands per
+second of wall time) per island count.  At ``islands=1`` the run is the
+``ga`` backend itself, so the x1 row doubles as a cross-check against
+``BENCH_ga.json``'s throughput; the x2/x4 rows show how much extra search
+the same wall-clock buys on spare cores (expect ~linear up to the
+machine's core count, then oversubscription flattens it).
+
+Save a run as ``BENCH_island.json`` (``--json``) to serve as the scaling
+baseline alongside ``BENCH_ga.json``.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.search import SearchSession, SearchSpec
+
+from benchmarks.common import emit, record
+
+
+def run(full: bool = False):
+    generations = 200 if full else 60
+    for islands in (1, 2, 4):
+        spec = SearchSpec(
+            workload="mobilenet_v3", accelerator="simba", backend="island",
+            backend_config={"generations": generations, "islands": islands,
+                            "migrate_every": 20}, seed=0)
+        session = SearchSession(spec)
+        artifact = session.run()
+        res = session.result
+        wall_s = artifact.wall_s
+        eps = res.offspring_evaluated / wall_s if wall_s > 0 else 0.0
+        emit(f"island_scaling_x{islands}", wall_s * 1e6,
+             f"evals_per_sec={eps:.0f};"
+             f"offspring={res.offspring_evaluated};"
+             f"best={res.best_fitness:.4f}")
+        record("island_scaling",
+               islands=islands, generations=generations, seed=spec.seed,
+               workload=spec.workload, accelerator=spec.accelerator,
+               cpu_count=os.cpu_count(),
+               wall_s=round(wall_s, 4),
+               evals_per_sec=round(eps, 1),
+               offspring_evaluated=res.offspring_evaluated,
+               best_fitness=res.best_fitness)
+
+
+if __name__ == "__main__":
+    run()

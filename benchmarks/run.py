@@ -25,14 +25,15 @@ def main() -> None:
 
     from benchmarks import (fig7_receptive_field, fig9_resnet50_groups,
                             fig10_workloads, fig11_repartition,
-                            ga_convergence, kernel_bench, roofline_table,
-                            tpu_schedule_bench)
+                            ga_convergence, island_scaling, kernel_bench,
+                            roofline_table, tpu_schedule_bench)
     suites = {
         "fig7": fig7_receptive_field,
         "fig9": fig9_resnet50_groups,
         "fig10": fig10_workloads,
         "fig11": fig11_repartition,
         "ga": ga_convergence,
+        "island": island_scaling,
         "kernels": kernel_bench,
         "roofline": roofline_table,
         "tpu_ga": tpu_schedule_bench,

@@ -1,7 +1,10 @@
-"""The ``repro`` CLI: run searches, inspect artifacts, list registries.
+"""The ``repro`` CLI: run searches, serve batches, inspect artifacts, list
+registries.
 
     repro search --workload mobilenet_v3 --accel simba --backend ga \\
         --out artifact.json
+    repro submit --store schedules/ --workload mobilenet_v3 --backend island
+    repro serve --store schedules/ --requests jobs.json --workers 4
     repro report artifact.json [--schedule] [--history]
     repro list
 
@@ -11,13 +14,13 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 from typing import List, Optional
 
 
-def _add_search_parser(sub) -> None:
-    p = sub.add_parser(
-        "search", help="run a schedule search and write a JSON artifact")
+def _add_spec_args(p) -> None:
+    """Arguments that assemble one SearchSpec (shared by search/submit)."""
     p.add_argument("--workload", required=True,
                    help="registered workload name (see `repro list`)")
     p.add_argument("--workload-kwargs", default="{}", metavar="JSON",
@@ -29,11 +32,13 @@ def _add_search_parser(sub) -> None:
     p.add_argument("--objective", default="edp",
                    help="registered objective (edp|energy|cycles|dram|...)")
     p.add_argument("--backend", default="ga",
-                   help="search backend (ga|random|hill_climb|exhaustive|...)")
+                   help="search backend (ga|island|random|hill_climb|"
+                        "exhaustive|...)")
     p.add_argument("--costmodel", default="default",
                    help="cost backend scoring the schedules (default|tpu|...)")
     p.add_argument("--backend-config", default="{}", metavar="JSON",
-                   help="backend options, e.g. '{\"crossover_rate\": 0.1}'")
+                   help="backend options, e.g. '{\"islands\": 4}' "
+                        "(knobs: `repro list`)")
     p.add_argument("--preset", choices=("paper", "fast"), default=None,
                    help="ga preset (paper: P=100 G=500; fast: CPU-friendly)")
     p.add_argument("--generations", type=int, default=None,
@@ -42,11 +47,65 @@ def _add_search_parser(sub) -> None:
     p.add_argument("--budget", type=int, default=None,
                    help="stop after this many offspring evaluations")
     p.add_argument("--patience", type=int, default=None,
-                   help="stop after N generations without improvement")
+                   help="stop after N backend steps without improvement "
+                        "(ga: a step is one generation; island: one sync "
+                        "barrier, i.e. up to ~10 generations; "
+                        "random/exhaustive: one scoring chunk)")
+
+
+def _spec_from_args(args):
+    """Build the SearchSpec an invocation of _add_spec_args describes."""
+    from repro.search import SearchSpec
+
+    backend_config = json.loads(args.backend_config)
+    if args.preset is not None:
+        backend_config.setdefault("preset", args.preset)
+    if args.generations is not None:
+        backend_config.setdefault("generations", args.generations)
+    return SearchSpec(
+        workload=args.workload, accelerator=args.accelerator,
+        objective=args.objective, backend=args.backend,
+        costmodel=args.costmodel, backend_config=backend_config,
+        workload_kwargs=json.loads(args.workload_kwargs),
+        seed=args.seed, budget=args.budget, patience=args.patience)
+
+
+def _add_search_parser(sub) -> None:
+    p = sub.add_parser(
+        "search", help="run a schedule search and write a JSON artifact")
+    _add_spec_args(p)
     p.add_argument("--out", default="artifact.json",
                    help="artifact path (default: artifact.json)")
     p.add_argument("--progress", type=int, default=0, metavar="N",
                    help="print progress every N backend steps")
+
+
+def _add_submit_parser(sub) -> None:
+    p = sub.add_parser(
+        "submit", help="resolve one search request against a schedule "
+                       "store: serve a stored artifact, or search and "
+                       "store the result")
+    _add_spec_args(p)
+    p.add_argument("--store", required=True,
+                   help="ArtifactStore directory (created if absent)")
+    p.add_argument("--out", default=None,
+                   help="also write the artifact JSON to this path")
+
+
+def _add_serve_parser(sub) -> None:
+    p = sub.add_parser(
+        "serve", help="drain a batch of search requests against a schedule "
+                      "store (dedup + cache + parallel search)")
+    p.add_argument("--requests", required=True, metavar="JOBS_JSON",
+                   help="JSON list of SearchSpec objects "
+                        "(or {\"jobs\": [...]})")
+    p.add_argument("--store", required=True,
+                   help="ArtifactStore directory (created if absent)")
+    p.add_argument("--workers", type=int, default=1,
+                   help="parallel search processes for cache misses "
+                        "(default 1 = inline)")
+    p.add_argument("--json", action="store_true",
+                   help="emit per-job outcomes + stats as JSON")
 
 
 def _add_report_parser(sub) -> None:
@@ -65,15 +124,20 @@ def _add_report_parser(sub) -> None:
                    help="emit the summary as JSON")
 
 
+def _summary_line(artifact) -> str:
+    s = artifact.summary()
+    return (f"{s['workload']} on {s['accelerator']} [{s['backend']}, "
+            f"costmodel {s['costmodel']}, seed {s['seed']}]: "
+            f"energy x{s['energy_x']}  {artifact.spec.objective} best "
+            f"{artifact.best_fitness:.4f}  edp x{s['edp_x']}  "
+            f"groups {s['groups']}  "
+            f"({artifact.evaluations} evals, {artifact.wall_s:.1f}s)")
+
+
 def _cmd_search(args) -> int:
-    from repro.search import search
+    from repro.search import SearchSession
 
-    backend_config = json.loads(args.backend_config)
-    if args.preset is not None:
-        backend_config.setdefault("preset", args.preset)
-    if args.generations is not None:
-        backend_config.setdefault("generations", args.generations)
-
+    spec = _spec_from_args(args)
     every = args.progress
 
     def progress(p) -> None:
@@ -81,29 +145,61 @@ def _cmd_search(args) -> int:
             print(f"  step {p.step:>5}  best {p.best_fitness:.4f}  "
                   f"evals {p.evaluations}", file=sys.stderr)
 
-    artifact = search(
-        args.workload, args.accelerator, objective=args.objective,
-        backend=args.backend, costmodel=args.costmodel, seed=args.seed,
-        budget=args.budget, patience=args.patience,
-        backend_config=backend_config,
-        workload_kwargs=json.loads(args.workload_kwargs),
-        progress=progress if every else None)
+    artifact = SearchSession(spec).run(progress=progress if every else None)
     artifact.save(args.out)
-    s = artifact.summary()
-    print(f"{s['workload']} on {s['accelerator']} [{s['backend']}, "
-          f"costmodel {s['costmodel']}, seed {s['seed']}]: "
-          f"energy x{s['energy_x']}  {artifact.spec.objective} best "
-          f"{artifact.best_fitness:.4f}  edp x{s['edp_x']}  "
-          f"groups {s['groups']}  "
-          f"({artifact.evaluations} evals, {artifact.wall_s:.1f}s)")
+    print(_summary_line(artifact))
     print(f"wrote {args.out}")
     return 0
+
+
+def _cmd_submit(args) -> int:
+    from repro.serve import ArtifactStore, BatchScheduler
+
+    store = ArtifactStore(args.store)
+    sched = BatchScheduler(store, workers=1)
+    sched.submit(_spec_from_args(args))
+    job = sched.run().jobs[0]
+    if job.status == "failed":
+        print(f"error: {job.error}", file=sys.stderr)
+        return 2
+    how = "served from store" if job.outcome == "cache_hit" \
+        else "searched and stored"
+    print(f"{how}  key={job.key}")
+    print(_summary_line(job.artifact))
+    if args.out:
+        job.artifact.save(args.out)
+        print(f"wrote {args.out}")
+    return 0
+
+
+def _cmd_serve(args) -> int:
+    from repro.serve import ArtifactStore, BatchScheduler
+    from repro.serve.scheduler import load_requests
+
+    store = ArtifactStore(args.store)
+    sched = BatchScheduler(store, workers=args.workers)
+    for spec in load_requests(args.requests):
+        sched.submit(spec)
+    quiet = args.json
+    outcome = sched.run(
+        progress=None if quiet else lambda job: print(job.describe()))
+    if args.json:
+        print(json.dumps(outcome.to_dict(), indent=2, sort_keys=True))
+    else:
+        s = outcome.stats
+        print(f"stats: {s['jobs']} jobs — {s['searched']} searched, "
+              f"{s['cache_hits']} cache hits "
+              f"({s['deduped_in_flight']} deduped in-flight), "
+              f"{s['failed']} failed; store holds {len(store)} schedules")
+    return 1 if outcome.stats["failed"] else 0
 
 
 def _cmd_report(args) -> int:
     from repro.search import ScheduleArtifact
 
     artifact = ScheduleArtifact.load(args.artifact)
+    for w in artifact.load_warnings:
+        print(f"warning: {w}", file=sys.stderr)
     s = artifact.summary()
     if args.json:
         print(json.dumps(s, indent=2, sort_keys=True))
@@ -163,12 +259,21 @@ def _schedule_result(artifact):
 
 
 def _cmd_list(_args) -> int:
+    import inspect
+
     from repro.search import (ACCELERATORS, BACKENDS, COSTMODELS, OBJECTIVES,
                               WORKLOADS)
     for reg in (WORKLOADS, ACCELERATORS, OBJECTIVES, BACKENDS, COSTMODELS):
         print(f"{reg.kind}s: " + ", ".join(reg.names()))
     print("(accelerators accept an iso-capacity repartition suffix: "
           "eyeriss@act+64; `repro.hw` holds their hierarchical descriptions)")
+    print()
+    print("backends (config knobs go in --backend-config JSON):")
+    for name in BACKENDS:
+        doc = inspect.getdoc(BACKENDS.get(name)) or "(undocumented)"
+        print(f"\n  {name}:")
+        for line in doc.splitlines():
+            print(f"    {line}".rstrip())
     return 0
 
 
@@ -176,20 +281,30 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="repro",
         description="GA-driven interlayer pipelining: search schedules, "
-                    "report artifacts.")
+                    "serve batches, report artifacts.")
     sub = ap.add_subparsers(dest="command", required=True)
     _add_search_parser(sub)
+    _add_submit_parser(sub)
+    _add_serve_parser(sub)
     _add_report_parser(sub)
     sub.add_parser("list", help="list registered workloads / accelerators / "
-                                "objectives / backends")
+                                "objectives / backends (with config knobs)")
     args = ap.parse_args(argv)
 
     from repro.search import BackendError, FingerprintMismatch, RegistryError
-    handler = {"search": _cmd_search, "report": _cmd_report,
+    from repro.serve import StoreError
+    handler = {"search": _cmd_search, "submit": _cmd_submit,
+               "serve": _cmd_serve, "report": _cmd_report,
                "list": _cmd_list}[args.command]
     try:
         return handler(args)
-    except (RegistryError, BackendError, FingerprintMismatch,
+    except BrokenPipeError:
+        # `repro report ... | head`: exit quietly; route stdout to devnull
+        # so the interpreter's shutdown flush doesn't raise again
+        devnull = os.open(os.devnull, os.O_WRONLY)
+        os.dup2(devnull, sys.stdout.fileno())
+        return 0
+    except (RegistryError, BackendError, FingerprintMismatch, StoreError,
             FileNotFoundError, json.JSONDecodeError, ValueError) as e:
         print(f"error: {e}", file=sys.stderr)
         return 2

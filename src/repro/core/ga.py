@@ -89,6 +89,14 @@ class GAResult:
 # search after that generation (budget/patience hooks in repro.search).
 GAObserver = Callable[[int, float, int, int], Optional[bool]]
 
+# Migration hook called once per generation with (generation index, pool of
+# (fitness, genome) entries) after selection and top-up; returning a list
+# replaces the pool (island-model elite exchange in repro.search.island),
+# returning None keeps it.  The hook must not consume RNG — per-island
+# determinism is what makes island runs reproducible.
+GAMigrate = Callable[[int, List[Tuple[float, object]]],
+                     Optional[List[Tuple[float, object]]]]
+
 
 def select_pool(entries: Sequence[Tuple[float, object]], top_n: int,
                 random_survivors: int, rng: random.Random,
@@ -116,13 +124,17 @@ def select_pool(entries: Sequence[Tuple[float, object]], top_n: int,
 
 
 def run_ga_problem(problem: SearchProblem, config: GAConfig = GAConfig(),
-                   observer: Optional[GAObserver] = None) -> GAResult:
+                   observer: Optional[GAObserver] = None,
+                   migrate: Optional[GAMigrate] = None) -> GAResult:
     """Run Alg. 1 against any :class:`SearchProblem`.
 
     ``observer`` (if given) is called after every generation and may return
     True to stop early — this is how ``repro.search`` sessions implement
     evaluation budgets and no-improvement patience without the loop knowing
-    about either.
+    about either.  ``migrate`` (if given) may replace the pool at the end of
+    each generation — this is the island-model elite-exchange hook
+    (``repro.search.island``); with ``migrate=None`` the loop's behavior is
+    bit-for-bit that of earlier revisions.
     """
     rng = random.Random(config.seed)
     fit_cache: Dict[Hashable, float] = {}
@@ -176,6 +188,10 @@ def run_ga_problem(problem: SearchProblem, config: GAConfig = GAConfig(),
             tfits = score(topup)
             offspring_evaluated += len(topup)
             pool.extend(zip(tfits, topup))
+        if migrate is not None:
+            migrated = migrate(gen, pool)
+            if migrated is not None:
+                pool = migrated
         history.append(max(f for f, _ in pool))
         if observer is not None and observer(gen, history[-1], len(fit_cache),
                                              offspring_evaluated):

@@ -74,6 +74,18 @@ class SearchProblem:
         """Number of genomes in the space, or None if unbounded/unknown."""
         return None
 
+    def encode_genome(self, genome):
+        """Compact, picklable wire form of a genome — what multi-process
+        backends (``repro.search.island``) ship between workers instead of
+        the live object (which may drag a whole graph through pickle).
+        Default: the genome itself."""
+        return genome
+
+    def decode_genome(self, data):
+        """Inverse of :meth:`encode_genome`, re-binding the wire form onto
+        this problem's live objects."""
+        return data
+
 
 class FusionProblem(SearchProblem):
     """The paper's interlayer-pipelining problem (§III): fusion-state genomes
@@ -131,3 +143,9 @@ class FusionProblem(SearchProblem):
 
     def space_size(self) -> int:
         return 1 << self.cg.m
+
+    def encode_genome(self, genome: FusionState) -> int:
+        return genome.mask
+
+    def decode_genome(self, data: int) -> FusionState:
+        return FusionState.from_mask(self.graph, data)

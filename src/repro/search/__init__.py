@@ -43,6 +43,7 @@ from repro.search.artifact import (FingerprintMismatch, ScheduleArtifact,
 from repro.search.backends import (BackendError, ExhaustiveBackend,
                                    GABackend, HillClimbBackend,
                                    RandomBackend, SearchBackend)
+from repro.search.island import IslandBackend, island_seed
 from repro.search.registry import (ACCELERATORS, BACKENDS, COSTMODELS,
                                    OBJECTIVES, WORKLOADS, Registry,
                                    RegistryError, build_accelerator,
@@ -56,10 +57,10 @@ from repro.search.spec import SearchSpec
 __all__ = [
     "ACCELERATORS", "BACKENDS", "COSTMODELS", "OBJECTIVES", "WORKLOADS",
     "BackendError", "ExhaustiveBackend", "FingerprintMismatch", "GABackend",
-    "HillClimbBackend", "Progress", "RandomBackend", "Registry",
-    "RegistryError", "ScheduleArtifact", "SearchBackend", "SearchSession",
-    "SearchSpec", "build_accelerator", "build_costmodel", "build_workload",
-    "graph_fingerprint", "register_accelerator", "register_backend",
-    "register_costmodel", "register_objective", "register_workload",
-    "search",
+    "HillClimbBackend", "IslandBackend", "Progress", "RandomBackend",
+    "Registry", "RegistryError", "ScheduleArtifact", "SearchBackend",
+    "SearchSession", "SearchSpec", "build_accelerator", "build_costmodel",
+    "build_workload", "graph_fingerprint", "island_seed",
+    "register_accelerator", "register_backend", "register_costmodel",
+    "register_objective", "register_workload", "search",
 ]

@@ -51,8 +51,22 @@ def _cost_to_dict(cost: ScheduleCost) -> Dict[str, Any]:
     return dataclasses.asdict(cost)
 
 
-def _cost_from_dict(d: Dict[str, Any]) -> ScheduleCost:
-    return ScheduleCost(**d)
+def _cost_from_dict(d: Dict[str, Any],
+                    warnings: Optional[List[str]] = None) -> ScheduleCost:
+    known = {f.name for f in dataclasses.fields(ScheduleCost)}
+    extra = sorted(set(d) - known)
+    if extra:
+        # forward-compat: a newer writer's additions degrade to a warning
+        if warnings is not None:
+            warnings.append(f"ignoring unknown ScheduleCost fields {extra}")
+        d = {k: v for k, v in d.items() if k in known}
+    try:
+        return ScheduleCost(**d)
+    except TypeError as e:
+        # missing required fields: baseline/best are load-bearing, so this
+        # IS corrupt — but surface it as the artifact-error type callers
+        # (CLI included) already handle, not a raw TypeError
+        raise ValueError(f"malformed ScheduleCost record: {e}") from None
 
 
 @dataclass
@@ -78,6 +92,9 @@ class ScheduleArtifact(ImprovementRatios):
     group_breakdowns: List[CostBreakdown] = field(default_factory=list)
     created_unix: int = 0
     version: int = ARTIFACT_VERSION
+    #: non-fatal schema degradations seen while loading (pre-cost-breakdown
+    #: writers, unknown fields, malformed breakdown rows); never serialized
+    load_warnings: List[str] = field(default_factory=list)
 
     def summary(self) -> Dict[str, Any]:
         return {
@@ -146,23 +163,52 @@ class ScheduleArtifact(ImprovementRatios):
             raise ValueError(
                 f"unsupported artifact version {d.get('version')!r} "
                 f"(this build reads version {ARTIFACT_VERSION})")
+        # auxiliary reporting data degrades to warnings, never to a crash:
+        # artifacts written before the CostModel protocol carry no per-group
+        # breakdowns, and a malformed row should not make the genome and
+        # costs (the load-bearing content) unreadable
+        warnings: List[str] = []
+        if "group_breakdowns" not in d:
+            warnings.append(
+                "artifact predates per-group cost breakdowns (older "
+                "writer); breakdown table unavailable — re-run the search "
+                "to regenerate it")
+        breakdowns = []
+        for i, b in enumerate(d.get("group_breakdowns", [])):
+            try:
+                breakdowns.append(CostBreakdown.from_dict(b))
+            except (KeyError, TypeError, AttributeError) as e:
+                warnings.append(
+                    f"dropping malformed group breakdown row {i}: "
+                    f"{type(e).__name__}: {e}")
+        try:
+            return cls._from_dict_checked(d, warnings, breakdowns)
+        except KeyError as e:
+            # a truncated artifact missing a whole required object is
+            # corrupt, but callers (CLI included) handle ValueError
+            raise ValueError(
+                f"artifact missing required field {e.args[0]!r}") from None
+
+    @classmethod
+    def _from_dict_checked(cls, d, warnings, breakdowns
+                           ) -> "ScheduleArtifact":
         return cls(
             spec=SearchSpec.from_dict(d["spec"]),
             graph_fingerprint=d["graph_fingerprint"],
             n_edges=d["n_edges"],
             genome_mask=int(d["genome_mask"], 16),
             best_fitness=d["best_fitness"],
-            baseline=_cost_from_dict(d["baseline"]),
-            best=_cost_from_dict(d["best"]),
+            baseline=_cost_from_dict(d["baseline"], warnings),
+            best=_cost_from_dict(d["best"], warnings),
             fused_edges=[list(e) for e in d.get("fused_edges", [])],
             history=d.get("history", []),
             evaluations=d.get("evaluations", 0),
             offspring_evaluated=d.get("offspring_evaluated", 0),
             wall_s=d.get("wall_s", 0.0),
             backend_stats=d.get("backend_stats", {}),
-            group_breakdowns=[CostBreakdown.from_dict(b)
-                              for b in d.get("group_breakdowns", [])],
+            group_breakdowns=breakdowns,
             created_unix=d.get("created_unix", 0),
+            load_warnings=warnings,
         )
 
     def to_json(self) -> str:

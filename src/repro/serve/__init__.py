@@ -1,0 +1,30 @@
+"""``repro.serve`` — the batch scheduling service over the search facade.
+
+Three pieces turn one-shot searches into a service that amortizes work
+across requests:
+
+* :mod:`repro.serve.store` — an on-disk, content-addressed
+  :class:`ArtifactStore`: finished :class:`~repro.search.ScheduleArtifact`s
+  keyed by (graph fingerprint, canonical :class:`~repro.search.SearchSpec`
+  hash), written atomically, readable across schema revisions;
+* :mod:`repro.serve.scheduler` — a :class:`BatchScheduler` that dedups
+  in-flight identical specs, serves store hits without searching, and fans
+  misses out across a worker pool;
+* the CLI verbs ``repro serve --requests jobs.json`` and ``repro submit``
+  (see ``repro.__main__``).
+
+    from repro.serve import ArtifactStore, BatchScheduler
+    store = ArtifactStore("schedules/")
+    sched = BatchScheduler(store, workers=4)
+    for spec in specs:
+        sched.submit(spec)
+    outcome = sched.run()       # outcome.stats: searched / cache_hits / ...
+"""
+from repro.serve.scheduler import BatchScheduler, Job, ServeOutcome
+from repro.serve.store import (ArtifactStore, StoreError, artifact_key,
+                               spec_hash)
+
+__all__ = [
+    "ArtifactStore", "BatchScheduler", "Job", "ServeOutcome", "StoreError",
+    "artifact_key", "spec_hash",
+]

@@ -1,0 +1,211 @@
+"""Island-model GA backend: ga-equivalence at islands=1, fixed-seed
+superiority at islands=4, migration determinism, seed derivation, and the
+migration plumbing itself."""
+import pytest
+
+from repro.core.ga import GAConfig, run_ga_problem
+from repro.core.problem import FusionProblem
+from repro.costmodel import SIMBA
+from repro.costmodel.evaluator import Evaluator
+from repro.search import BackendError, search
+from repro.search.island import (IslandBackend, island_seed, inject_migrants,
+                                 _sync_gens)
+from repro.workloads import vgg16
+
+FAST = {"preset": "fast", "generations": 12}
+
+
+def _search(backend, seed=3, **extra):
+    return search("vgg16", "simba", backend=backend, seed=seed,
+                  backend_config={**FAST, **extra})
+
+
+# ---- ga equivalence ---------------------------------------------------------------
+
+def test_islands_one_bit_identical_to_ga():
+    """At islands=1 the backend IS the ga backend: genome, fitness,
+    history, and the winning ScheduleCost agree bit-for-bit at fixed
+    seed."""
+    a = _search("ga")
+    b = _search("island", islands=1)
+    assert b.genome_mask == a.genome_mask
+    assert b.best_fitness == a.best_fitness
+    assert b.history == a.history
+    assert b.best == a.best                  # frozen dataclass: field-exact
+    assert b.baseline == a.baseline
+    assert b.evaluations == a.evaluations
+    assert b.offspring_evaluated == a.offspring_evaluated
+
+
+def test_islands_four_fixed_seed_fitness_at_least_ga():
+    a = _search("ga")
+    b = _search("island", islands=4, migrate_every=4)
+    assert b.best_fitness >= a.best_fitness
+    # 4 islands really did ~4x the search work
+    assert b.offspring_evaluated > 3 * a.offspring_evaluated
+
+
+# ---- determinism ------------------------------------------------------------------
+
+def test_migration_determinism_across_runs():
+    a = _search("island", islands=3, migrate_every=3)
+    b = _search("island", islands=3, migrate_every=3)
+    assert a.genome_mask == b.genome_mask
+    assert a.best_fitness == b.best_fitness
+    assert a.history == b.history
+
+
+def test_thread_workers_match_process_workers():
+    a = _search("island", islands=3, migrate_every=3)
+    b = _search("island", islands=3, migrate_every=3, workers="thread")
+    assert a.genome_mask == b.genome_mask
+    assert a.history == b.history
+
+
+def test_island_seed_derivation():
+    assert island_seed(7, 0) == 7            # island 0 reproduces ga's stream
+    seeds = [island_seed(7, i) for i in range(8)]
+    assert len(set(seeds)) == 8
+    assert seeds == [island_seed(7, i) for i in range(8)]  # stable
+    assert island_seed(8, 3) != island_seed(7, 3)
+
+
+# ---- config / session integration -------------------------------------------------
+
+def test_island_config_validation():
+    with pytest.raises(BackendError):
+        _search("island", islands=0)
+    with pytest.raises(BackendError):
+        _search("island", migrate_every=0)
+    with pytest.raises(BackendError):
+        _search("island", workers="gpu")
+    with pytest.raises(BackendError):
+        _search("island", islands=2, nonsense=1)
+
+
+def test_island_rejects_seed_carrying_ga_config():
+    """A ga_config seed would win over island_seed derivation and collapse
+    every island onto one stream (N identical searches)."""
+    with pytest.raises(BackendError, match="per-island seeds"):
+        search("vgg16", "simba", backend="island",
+               backend_config={"islands": 2,
+                               "ga_config": {"generations": 4, "seed": 5}})
+    # seedless ga_config dicts are fine: each island gets its derived seed
+    art = search("vgg16", "simba", backend="island", seed=3,
+                 backend_config={"islands": 2, "migrate_every": 2,
+                                 "ga_config": {"generations": 4,
+                                               "population": 20,
+                                               "top_n": 4,
+                                               "mutations_per_gen": 20,
+                                               "random_survivors": 3}})
+    assert art.best_fitness >= 1.0
+
+
+def test_failed_island_releases_the_healthy_ones():
+    """One dead island must not leave its peers blocked at the sync
+    barrier until the recv timeout: the parent broadcasts stop."""
+    import queue
+
+    from repro.search.island import _Chan
+
+    dead_inbox = queue.Queue()
+    dead_inbox.put(("error", "boom"))
+    dead = _Chan(inbox=dead_inbox, outbox=queue.Queue())
+    healthy_out = queue.Queue()
+    healthy = _Chan(inbox=queue.Queue(), outbox=healthy_out)
+    with pytest.raises(BackendError, match="island 0 failed: boom"):
+        IslandBackend._drive(problem=None, chans=[dead, healthy],
+                             sync_gens=[1], migrate_every=2, observer=None)
+    assert healthy_out.get_nowait() == ("stop", [])
+
+
+def test_chan_turns_dead_peer_into_timeout_error():
+    """A hard-killed worker (closed pipe) must surface through recv as the
+    worker-is-gone error, not a raw EOFError."""
+    import multiprocessing
+
+    from repro.search.island import _Chan
+
+    try:
+        ctx = multiprocessing.get_context("fork")
+    except ValueError:
+        pytest.skip("no fork on this platform")
+    parent, child = ctx.Pipe(duplex=True)
+    child.close()                            # the "worker" died
+    with pytest.raises(TimeoutError, match="died"):
+        _Chan(conn=parent).recv(timeout=5)
+
+
+def test_erroring_problem_surfaces_promptly_as_backend_error():
+    import time
+
+    class Exploding(FusionProblem):
+        def fitness_batch(self, genomes):
+            raise RuntimeError("cost service down")
+
+    g = vgg16()
+    problem = Exploding(g, Evaluator(g, SIMBA))
+    t0 = time.monotonic()
+    with pytest.raises(BackendError, match="island .* failed"):
+        IslandBackend().run(problem, seed=0, islands=2, migrate_every=2,
+                            preset="fast", generations=6)
+    assert time.monotonic() - t0 < 60
+
+
+def test_island_budget_stops_at_sync():
+    full = _search("island", islands=2, migrate_every=2)
+    capped = search("vgg16", "simba", backend="island", seed=3, budget=1,
+                    backend_config={**FAST, "islands": 2, "migrate_every": 2})
+    assert len(capped.history) < len(full.history)
+
+
+def test_island_budget_enforced_even_without_migrations():
+    """migrate_every larger than the run must not disable the budget:
+    observation-only syncs still let the session stop the islands."""
+    capped = search("vgg16", "simba", backend="island", seed=3, budget=1,
+                    backend_config={"preset": "fast", "generations": 25,
+                                    "islands": 2, "migrate_every": 1000})
+    assert len(capped.history) <= 10         # stopped at the first obs sync
+
+
+# ---- migration plumbing -----------------------------------------------------------
+
+def test_sync_gens_skip_last_generation():
+    assert _sync_gens(10, 3) == [2, 5, 8]
+    assert _sync_gens(9, 3) == [2, 5]        # g=8 is the last gen: dropped
+    assert _sync_gens(10, 20) == []          # run shorter than any cadence
+    # large migrate_every still observes every OBSERVE_EVERY_MAX gens
+    # (g=19,39 are migrations; 9/29 observation-only; 39 dropped as last)
+    assert _sync_gens(40, 20) == [9, 19, 29]
+
+
+def test_inject_migrants_replaces_worst_keeps_best():
+    g = vgg16()
+    problem = FusionProblem(g, Evaluator(g, SIMBA))
+    res = run_ga_problem(problem, GAConfig.fast(generations=2, seed=0))
+    pool = [(problem.fitness(res.best_state), res.best_state),
+            (0.5, problem.initial())]
+    better = run_ga_problem(problem, GAConfig.fast(generations=4, seed=9))
+    enc = problem.encode_genome(better.best_state)
+    out = inject_migrants(problem, pool, [(better.best_fitness, enc)])
+    assert len(out) == 2
+    keys = {problem.key(s) for _, s in out}
+    assert problem.key(res.best_state) in keys          # best survives
+    assert problem.key(better.best_state) in keys       # migrant landed
+    # duplicate immigrants are dropped, pool unchanged
+    again = inject_migrants(problem, out, [(better.best_fitness, enc)])
+    assert {problem.key(s) for _, s in again} == keys
+
+
+def test_sync_gens_1_means_migrate_every_generation():
+    assert _sync_gens(4, 1) == [0, 1, 2]
+
+
+def test_encode_decode_genome_round_trip():
+    g = vgg16()
+    problem = FusionProblem(g, Evaluator(g, SIMBA))
+    state = problem.initial().mutate(__import__("random").Random(0))
+    enc = problem.encode_genome(state)
+    assert isinstance(enc, int)
+    back = problem.decode_genome(enc)
+    assert back.mask == state.mask and back.graph is g

@@ -1,0 +1,400 @@
+"""`repro.serve`: content-addressed ArtifactStore (round-trip, atomicity,
+concurrent writers, schema leniency) and the batch scheduler (in-flight
+dedup, store hits with zero new evaluations, worker fan-out, CLI verbs)."""
+import json
+import multiprocessing
+import os
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.costmodel.evaluator import ScheduleCost
+from repro.search import ScheduleArtifact, SearchSpec
+from repro.serve import (ArtifactStore, BatchScheduler, StoreError,
+                         artifact_key, spec_hash)
+
+FAST = {"preset": "fast", "generations": 4}
+
+
+def make_artifact(workload="vgg16", seed=0, mask=0x15, fitness=1.25,
+                  fingerprint="sha256:feed", backend="ga"):
+    """A structurally valid artifact without running a search."""
+    cost = ScheduleCost(energy_pj=10.0, cycles=5.0, dram_read_words=7,
+                        dram_write_words=3, act_write_events=2, macs=100,
+                        n_groups=4)
+    return ScheduleArtifact(
+        spec=SearchSpec(workload=workload, backend=backend, seed=seed,
+                        backend_config=dict(FAST)),
+        graph_fingerprint=fingerprint, n_edges=21, genome_mask=mask,
+        best_fitness=fitness, baseline=cost, best=cost,
+        history=[1.0, fitness], evaluations=9, offspring_evaluated=12)
+
+
+# ---- keys -------------------------------------------------------------------------
+
+def test_spec_hash_canonical_across_json_round_trip():
+    spec = SearchSpec(workload="vgg16", backend="island",
+                      backend_config={"islands": 4, "migrate_every": 8})
+    again = SearchSpec.from_json(spec.to_json())
+    assert spec_hash(spec) == spec_hash(again)
+    assert artifact_key("sha256:f", spec) == artifact_key("sha256:f", again)
+
+
+def test_key_changes_with_spec_and_fingerprint():
+    spec = SearchSpec(workload="vgg16")
+    assert artifact_key("sha256:a", spec) != artifact_key("sha256:b", spec)
+    assert artifact_key("sha256:a", spec) != \
+        artifact_key("sha256:a", spec.replace(seed=1))
+
+
+# ---- store round-trip -------------------------------------------------------------
+
+@settings(max_examples=25)
+@given(mask=st.integers(min_value=0, max_value=(1 << 21) - 1),
+       seed=st.integers(min_value=0, max_value=1 << 16),
+       workload=st.sampled_from(["vgg16", "unet", "resnet50"]),
+       backend=st.sampled_from(["ga", "island", "random"]))
+def test_store_put_get_round_trip(mask, seed, workload, backend):
+    # tempfile, not a pytest fixture: the conftest hypothesis shim (and
+    # real hypothesis's health checks) don't mix fixtures with @given
+    import shutil
+    import tempfile
+    root = tempfile.mkdtemp(prefix="store-prop-")
+    try:
+        store = ArtifactStore(root)
+        art = make_artifact(workload=workload, seed=seed, mask=mask,
+                            backend=backend)
+        key = store.put(art)
+        got = store.get(art.graph_fingerprint, art.spec)
+        assert got is not None
+        assert got.to_dict() == art.to_dict()
+        assert store.path_for(key).startswith(root)
+        assert list(store.keys()) == [key]
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def test_store_miss_and_counters(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    assert store.get("sha256:none", SearchSpec(workload="vgg16")) is None
+    store.put(make_artifact())
+    store.get("sha256:feed", make_artifact().spec)
+    s = store.stats()
+    assert (s["hits"], s["misses"], s["puts"], s["objects"]) == (1, 1, 1, 1)
+
+
+def test_store_put_is_idempotent(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    art = make_artifact()
+    assert store.put(art) == store.put(art)
+    assert len(store) == 1
+
+
+def test_store_rejects_corrupt_object(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    art = make_artifact()
+    key = store.put(art)
+    with open(store.path_for(key), "w") as f:
+        f.write("{ not json")
+    with pytest.raises(StoreError, match="corrupt"):
+        store.get(art.graph_fingerprint, art.spec)
+
+
+def test_store_rejects_key_content_mismatch(tmp_path):
+    """An object hand-copied under the wrong key must not be served."""
+    store = ArtifactStore(str(tmp_path))
+    art = make_artifact()
+    key = store.put(art)
+    other = make_artifact(seed=99)
+    wrong = store.path_for(artifact_key(other.graph_fingerprint, other.spec))
+    os.makedirs(os.path.dirname(wrong), exist_ok=True)
+    with open(store.path_for(key)) as src, open(wrong, "w") as dst:
+        dst.write(src.read())
+    with pytest.raises(StoreError, match="does not match its key"):
+        store.get(other.graph_fingerprint, other.spec)
+
+
+def test_store_version_gate(tmp_path):
+    ArtifactStore(str(tmp_path))
+    (tmp_path / "store.json").write_text(json.dumps({"store_version": 99}))
+    with pytest.raises(StoreError, match="layout version"):
+        ArtifactStore(str(tmp_path))
+
+
+def test_store_requires_create_flag_for_new_root(tmp_path):
+    with pytest.raises(StoreError, match="no store"):
+        ArtifactStore(str(tmp_path / "absent"), create=False)
+
+
+# ---- schema leniency (pre-PR-3 artifacts) -----------------------------------------
+
+def _pre_pr3_dict():
+    """An artifact dict as PR-2-era builds wrote it: no costmodel field,
+    no group_breakdowns key."""
+    d = make_artifact().to_dict()
+    del d["group_breakdowns"]
+    del d["spec"]["costmodel"]
+    return d
+
+
+def test_pre_pr3_artifact_loads_with_warning(tmp_path):
+    art = ScheduleArtifact.from_dict(_pre_pr3_dict())
+    assert art.spec.costmodel == "default"
+    assert art.group_breakdowns == []
+    assert any("predates per-group cost breakdowns" in w
+               for w in art.load_warnings)
+    # and straight out of a store object file, too
+    store = ArtifactStore(str(tmp_path))
+    path = store.path_for(artifact_key(art.graph_fingerprint, art.spec))
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(_pre_pr3_dict(), f)
+    got = store.get(art.graph_fingerprint, art.spec)
+    assert got is not None and got.load_warnings
+
+
+def test_malformed_breakdown_rows_drop_not_crash():
+    d = make_artifact().to_dict()
+    d["group_breakdowns"] = [{"bogus": 1}]
+    art = ScheduleArtifact.from_dict(d)
+    assert art.group_breakdowns == []
+    assert any("malformed group breakdown" in w for w in art.load_warnings)
+
+
+def test_missing_cost_fields_raise_value_error_not_type_error(tmp_path):
+    """baseline/best are load-bearing: a record missing required fields is
+    corrupt, but it must surface as the error type callers (and the CLI
+    handler) already catch."""
+    from repro.__main__ import main
+    d = make_artifact().to_dict()
+    del d["best"]["energy_pj"]
+    with pytest.raises(ValueError, match="malformed ScheduleCost"):
+        ScheduleArtifact.from_dict(d)
+    path = tmp_path / "corrupt.json"
+    path.write_text(json.dumps(d))
+    assert main(["report", str(path)]) == 2      # "error: ...", no traceback
+
+
+def test_truncated_artifact_missing_object_raises_value_error(tmp_path):
+    from repro.__main__ import main
+    d = make_artifact().to_dict()
+    del d["best"]
+    with pytest.raises(ValueError, match="missing required field 'best'"):
+        ScheduleArtifact.from_dict(d)
+    path = tmp_path / "truncated.json"
+    path.write_text(json.dumps(d))
+    assert main(["report", str(path)]) == 2
+
+
+def test_unknown_cost_fields_warn_not_crash():
+    d = make_artifact().to_dict()
+    d["best"]["future_field"] = 1.0
+    art = ScheduleArtifact.from_dict(d)
+    assert art.best.energy_pj == 10.0
+    assert any("unknown ScheduleCost fields" in w for w in art.load_warnings)
+
+
+def test_cli_report_pre_pr3_artifact_warns_and_succeeds(tmp_path, capsys):
+    from repro.__main__ import main
+    path = tmp_path / "old.json"
+    path.write_text(json.dumps(_pre_pr3_dict()))
+    assert main(["report", str(path)]) == 0
+    err = capsys.readouterr().err
+    assert "warning" in err and "predates" in err
+
+
+# ---- concurrent writers -----------------------------------------------------------
+
+def _hammer(args):
+    root, worker = args
+    store = ArtifactStore(root)
+    for i in range(12):
+        # keys overlap across workers (same seed -> same key), so every
+        # object is raced by all four writers
+        store.put(make_artifact(mask=i, seed=i, fitness=1.0 + worker))
+    return worker
+
+
+def test_concurrent_writers_never_tear_objects(tmp_path):
+    root = str(tmp_path)
+    ArtifactStore(root)
+    try:
+        ctx = multiprocessing.get_context("fork")
+    except ValueError:
+        pytest.skip("no fork on this platform")
+    with ctx.Pool(4) as pool:
+        done = pool.map(_hammer, [(root, w) for w in range(4)])
+    assert sorted(done) == [0, 1, 2, 3]
+    store = ArtifactStore(root)
+    keys = list(store.keys())
+    assert len(keys) == 12                   # one object per distinct key
+    for key in keys:
+        art = store.load_key(key)            # parses whole: never torn
+        assert art.genome_mask in range(12)
+        assert art.best_fitness in (1.0, 2.0, 3.0, 4.0)
+
+
+# ---- scheduler --------------------------------------------------------------------
+
+def test_scheduler_dedups_and_caches(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    sched = BatchScheduler(store, workers=1)
+    spec = SearchSpec(workload="vgg16", backend_config=dict(FAST))
+    sched.submit(spec)
+    sched.submit(SearchSpec.from_dict(spec.to_dict()))   # identical
+    sched.submit(spec.replace(seed=1))                   # distinct
+    out = sched.run()
+    s = out.stats
+    assert s["searched"] == 2 and s["cache_hits"] == 1
+    assert s["deduped_in_flight"] == 1 and s["failed"] == 0
+    assert sched.searches_run == 2
+    assert out.jobs[1].key == out.jobs[0].key
+
+
+def test_scheduler_resubmit_hits_store_with_zero_evaluations(tmp_path,
+                                                            monkeypatch):
+    store = ArtifactStore(str(tmp_path))
+    spec = SearchSpec(workload="vgg16", backend_config=dict(FAST))
+    first = BatchScheduler(store, workers=1)
+    first.submit(spec)
+    assert first.run().stats["searched"] == 1
+
+    # an identical resubmission must be a pure read: no session, no
+    # evaluator, zero new evaluations — searching at all is the failure
+    import repro.serve.scheduler as sched_mod
+
+    def boom(*a, **k):
+        raise AssertionError("cache hit must not build a SearchSession")
+
+    monkeypatch.setattr(sched_mod, "SearchSession", boom)
+    again = BatchScheduler(store, workers=1)
+    job = again.submit(SearchSpec.from_dict(spec.to_dict()))
+    out = again.run()
+    assert out.stats == {**out.stats, "searched": 0, "cache_hits": 1}
+    assert again.searches_run == 0
+    assert job.artifact.genome_mask >= 0
+
+
+def test_scheduler_worker_pool_matches_inline(tmp_path):
+    specs = [SearchSpec(workload="vgg16", backend_config=dict(FAST)),
+             SearchSpec(workload="unet", backend_config=dict(FAST))]
+    inline_store = ArtifactStore(str(tmp_path / "a"))
+    pooled_store = ArtifactStore(str(tmp_path / "b"))
+    inline = BatchScheduler(inline_store, workers=1)
+    pooled = BatchScheduler(pooled_store, workers=2)
+    for s in specs:
+        inline.submit(s)
+        pooled.submit(s)
+    ja, jb = inline.run().jobs, pooled.run().jobs
+    for a, b in zip(ja, jb):
+        assert a.key == b.key
+        assert a.artifact.genome_mask == b.artifact.genome_mask
+        assert a.artifact.best_fitness == b.artifact.best_fitness
+
+
+def test_scheduler_pool_runs_island_backend(tmp_path):
+    """Island searches inside daemonic pool workers degrade to threads
+    (daemons may not fork children) instead of failing the job."""
+    store = ArtifactStore(str(tmp_path))
+    sched = BatchScheduler(store, workers=2)
+    island = SearchSpec(workload="vgg16", backend="island",
+                        backend_config={**FAST, "islands": 2,
+                                        "migrate_every": 2})
+    sched.submit(island)
+    sched.submit(SearchSpec(workload="unet", backend_config=dict(FAST)))
+    out = sched.run()
+    assert out.stats["failed"] == 0 and out.stats["searched"] == 2
+    # pooled island result matches the inline one exactly
+    inline = BatchScheduler(ArtifactStore(str(tmp_path / "b")), workers=1)
+    job = inline.submit(SearchSpec.from_dict(island.to_dict()))
+    inline.run()
+    assert job.artifact.genome_mask == out.jobs[0].artifact.genome_mask
+
+
+def test_scheduler_isolates_failing_jobs(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    sched = BatchScheduler(store, workers=1)
+    sched.submit(SearchSpec(workload="no_such_net"))
+    ok = sched.submit(SearchSpec(workload="vgg16",
+                                 backend_config=dict(FAST)))
+    out = sched.run()
+    assert out.stats["failed"] == 1 and out.stats["searched"] == 1
+    assert out.jobs[0].status == "failed" and "no_such_net" in \
+        out.jobs[0].error
+    assert ok.status == "done"
+
+
+def test_scheduler_isolates_corrupt_store_objects(tmp_path):
+    """One damaged store object fails only its own job; the rest of the
+    batch still resolves."""
+    store = ArtifactStore(str(tmp_path))
+    spec = SearchSpec(workload="vgg16", backend_config=dict(FAST))
+    seeder = BatchScheduler(store, workers=1)
+    seeder.submit(spec)
+    key = seeder.run().jobs[0].key
+    with open(store.path_for(key), "w") as f:
+        f.write("{ torn")
+    sched = BatchScheduler(store, workers=1)
+    bad = sched.submit(SearchSpec.from_dict(spec.to_dict()))
+    good = sched.submit(SearchSpec(workload="unet",
+                                   backend_config=dict(FAST)))
+    out = sched.run()
+    assert bad.status == "failed" and "corrupt" in bad.error
+    assert good.status == "done"
+    assert out.stats["failed"] == 1 and out.stats["searched"] == 1
+
+
+# ---- CLI --------------------------------------------------------------------------
+
+def _write_jobs(path, n_dup=2):
+    jobs = [{"workload": "vgg16", "backend_config": FAST}] * n_dup
+    jobs.append({"workload": "unet", "backend_config": FAST})
+    path.write_text(json.dumps(jobs))
+
+
+def test_cli_serve_then_submit_round(tmp_path, capsys):
+    from repro.__main__ import main
+    jobs = tmp_path / "jobs.json"
+    store = tmp_path / "store"
+    _write_jobs(jobs)
+    rc = main(["serve", "--store", str(store), "--requests", str(jobs),
+               "--json"])
+    assert rc == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["stats"]["searched"] == 2
+    assert payload["stats"]["cache_hits"] == 1
+
+    # full-batch resubmission: all served, nothing searched
+    rc = main(["serve", "--store", str(store), "--requests", str(jobs),
+               "--json"])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 0 and payload["stats"]["searched"] == 0
+    assert payload["stats"]["cache_hits"] == 3
+
+    # submit: identical single request is a store hit
+    out = tmp_path / "served.json"
+    rc = main(["submit", "--store", str(store), "--workload", "vgg16",
+               "--backend-config", json.dumps(FAST), "--out", str(out)])
+    assert rc == 0
+    assert "served from store" in capsys.readouterr().out
+    assert json.loads(out.read_text())["spec"]["workload"] == "vgg16"
+
+
+def test_cli_serve_reports_failures_in_exit_code(tmp_path, capsys):
+    from repro.__main__ import main
+    jobs = tmp_path / "jobs.json"
+    jobs.write_text(json.dumps([{"workload": "no_such_net"}]))
+    assert main(["serve", "--store", str(tmp_path / "s"),
+                 "--requests", str(jobs)]) == 1
+    assert main(["serve", "--store", str(tmp_path / "s"),
+                 "--requests", str(tmp_path / "missing.json")]) == 2
+
+
+def test_cli_list_shows_backend_knobs(capsys):
+    from repro.__main__ import main
+    assert main(["list"]) == 0
+    out = capsys.readouterr().out
+    assert "island" in out
+    assert "migrate_every" in out            # knobs surfaced from docstrings
+    assert "crossover_rate" in out
