@@ -6,6 +6,10 @@ Start at ``repro.search`` (the pluggable search facade) or the CLI:
 
     repro search --workload mobilenet_v3 --accel simba --backend ga \\
         --out artifact.json
+    repro search --workload file:model.json   # any repro.ir GraphIR doc
     repro report artifact.json
+
+Workloads are open via ``repro.ir``: JSON graph documents and JAX-traced
+functions search exactly like zoo entries.
 """
-__version__ = "0.2.0"
+__version__ = "0.3.0"

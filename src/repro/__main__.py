@@ -1,12 +1,17 @@
 """The ``repro`` CLI: run searches, serve batches, inspect artifacts, list
-registries.
+registries, export workload IR.
 
     repro search --workload mobilenet_v3 --accel simba --backend ga \\
         --out artifact.json
+    repro search --workload file:model.json --backend ga   # bring your own
     repro submit --store schedules/ --workload mobilenet_v3 --backend island
     repro serve --store schedules/ --requests jobs.json --workers 4
     repro report artifact.json [--schedule] [--history]
-    repro list
+    repro export --workload mobilenet_v3@hw=160 --out model.json
+    repro list [--json]
+
+``--workload`` accepts every spec form (``name``, ``name@key=value,...``,
+``file:model.json``); see ``repro.search.registry``.
 
 (Also reachable as ``python -m repro ...`` with ``PYTHONPATH=src``.)
 """
@@ -22,9 +27,12 @@ from typing import List, Optional
 def _add_spec_args(p) -> None:
     """Arguments that assemble one SearchSpec (shared by search/submit)."""
     p.add_argument("--workload", required=True,
-                   help="registered workload name (see `repro list`)")
+                   help="workload spec: a registered name (see `repro "
+                        "list`), name@key=value,... params, or "
+                        "file:model.json GraphIR")
     p.add_argument("--workload-kwargs", default="{}", metavar="JSON",
-                   help="builder kwargs, e.g. '{\"hw\": 128}'")
+                   help="builder kwargs, e.g. '{\"hw\": 128}' "
+                        "(equivalent to @-params in --workload)")
     p.add_argument("--accelerator", "--accel", dest="accelerator",
                    default="simba",
                    help="accelerator (repro.hw catalog name), optionally "
@@ -78,6 +86,23 @@ def _add_search_parser(sub) -> None:
                    help="artifact path (default: artifact.json)")
     p.add_argument("--progress", type=int, default=0, metavar="N",
                    help="print progress every N backend steps")
+    p.add_argument("--embed-ir", action="store_true",
+                   help="embed the workload's GraphIR in the artifact "
+                        "(self-contained report/rebind; automatic for "
+                        "file: workloads)")
+
+
+def _add_export_parser(sub) -> None:
+    p = sub.add_parser(
+        "export", help="export a workload's canonical GraphIR JSON "
+                       "(file: round-trips byte-identically)")
+    p.add_argument("--workload", required=True,
+                   help="workload spec (name, name@key=value, or "
+                        "file:model.json)")
+    p.add_argument("--workload-kwargs", default="{}", metavar="JSON",
+                   help="builder kwargs, e.g. '{\"hw\": 128}'")
+    p.add_argument("--out", default=None,
+                   help="output path (default: <workload name>.json)")
 
 
 def _add_submit_parser(sub) -> None:
@@ -145,7 +170,8 @@ def _cmd_search(args) -> int:
             print(f"  step {p.step:>5}  best {p.best_fitness:.4f}  "
                   f"evals {p.evaluations}", file=sys.stderr)
 
-    artifact = SearchSession(spec).run(progress=progress if every else None)
+    session = SearchSession(spec, embed_ir=True if args.embed_ir else None)
+    artifact = session.run(progress=progress if every else None)
     artifact.save(args.out)
     print(_summary_line(artifact))
     print(f"wrote {args.out}")
@@ -258,15 +284,59 @@ def _schedule_result(artifact):
         best_state=state, ga=ga)
 
 
-def _cmd_list(_args) -> int:
+def _cmd_export(args) -> int:
+    import repro.ir as ir
+    from repro.search import build_workload
+
+    graph = build_workload(args.workload, **json.loads(args.workload_kwargs))
+    out = args.out or f"{graph.name}.json"
+    gir = graph.to_ir()
+    ir.save(gir, out)
+    print(f"wrote {out}  ({len(gir.nodes)} nodes, "
+          f"fingerprint {gir.fingerprint()})")
+    print(f"search it with: repro search --workload file:{out}")
+    return 0
+
+
+def _list_payload() -> dict:
+    """The machine-readable registry dump behind ``repro list --json``."""
     import inspect
 
     from repro.search import (ACCELERATORS, BACKENDS, COSTMODELS, OBJECTIVES,
-                              WORKLOADS)
+                              workload_schemas)
+    return {
+        "workloads": workload_schemas(),
+        "workload_spec_forms": ["<name>", "<name>@key=value[,key=value...]",
+                                "file:<model.json>"],
+        "accelerators": ACCELERATORS.names(),
+        "accelerator_spec_forms": ["<name>", "<name>@act+<KiB>",
+                                   "<name>@act-<KiB>"],
+        "objectives": OBJECTIVES.names(),
+        "backends": {name: {"doc": inspect.getdoc(BACKENDS.get(name)) or ""}
+                     for name in BACKENDS},
+        "costmodels": COSTMODELS.names(),
+    }
+
+
+def _cmd_list(args) -> int:
+    import inspect
+
+    from repro.search import (ACCELERATORS, BACKENDS, COSTMODELS, OBJECTIVES,
+                              WORKLOADS, workload_schemas)
+    if getattr(args, "json", False):
+        print(json.dumps(_list_payload(), indent=2, sort_keys=True))
+        return 0
     for reg in (WORKLOADS, ACCELERATORS, OBJECTIVES, BACKENDS, COSTMODELS):
         print(f"{reg.kind}s: " + ", ".join(reg.names()))
     print("(accelerators accept an iso-capacity repartition suffix: "
           "eyeriss@act+64; `repro.hw` holds their hierarchical descriptions)")
+    print()
+    print("workloads (params go in --workload name@key=value,... or "
+          "--workload-kwargs JSON; file:model.json imports GraphIR):")
+    for name, info in sorted(workload_schemas().items()):
+        params = ", ".join(f"{k}={v['default']!r} ({v['type']})"
+                           for k, v in info["params"].items()) or "(none)"
+        print(f"  {name}: {params}")
     print()
     print("backends (config knobs go in --backend-config JSON):")
     for name in BACKENDS:
@@ -287,15 +357,21 @@ def main(argv: Optional[List[str]] = None) -> int:
     _add_submit_parser(sub)
     _add_serve_parser(sub)
     _add_report_parser(sub)
-    sub.add_parser("list", help="list registered workloads / accelerators / "
-                                "objectives / backends (with config knobs)")
+    _add_export_parser(sub)
+    lp = sub.add_parser(
+        "list", help="list registered workloads / accelerators / "
+                     "objectives / backends (with config knobs)")
+    lp.add_argument("--json", action="store_true",
+                    help="machine-readable dump: workloads with param "
+                         "schemas, accelerators, objectives, backends "
+                         "(with docs), costmodels")
     args = ap.parse_args(argv)
 
     from repro.search import BackendError, FingerprintMismatch, RegistryError
     from repro.serve import StoreError
     handler = {"search": _cmd_search, "submit": _cmd_submit,
                "serve": _cmd_serve, "report": _cmd_report,
-               "list": _cmd_list}[args.command]
+               "export": _cmd_export, "list": _cmd_list}[args.command]
     try:
         return handler(args)
     except BrokenPipeError:

@@ -138,6 +138,11 @@ class LayerGraph:
         self._succ: Dict[str, List[str]] = {}
         self._pred: Dict[str, List[str]] = {}
         self._compiled: "CompiledGraph" = None
+        #: declared model outputs (None = every sink).  Carried so graphs
+        #: built from IR with non-sink outputs (multi-head models) keep
+        #: them through a to_ir() round-trip instead of collapsing to
+        #: sinks and changing the fingerprint.
+        self.outputs: "List[str]" = None
 
     # ---- construction ---------------------------------------------------------
     def add(self, layer: Layer, inputs: Sequence[str] = ()) -> str:
@@ -185,6 +190,24 @@ class LayerGraph:
     @property
     def total_weights(self) -> int:
         return sum(l.weight_size for l in self.layers.values())
+
+    # ---- IR interchange --------------------------------------------------------
+    def to_ir(self):
+        """This graph as serializable :class:`repro.ir.GraphIR` (exact:
+        node order, input order, and geometry are preserved verbatim)."""
+        from repro.ir import GraphIR                 # lazy: ir imports us
+        return GraphIR.from_graph(self)
+
+    @staticmethod
+    def from_ir(ir) -> "LayerGraph":
+        """Materialize a :class:`repro.ir.GraphIR` (accepts the IR object,
+        its dict form, or its JSON text)."""
+        from repro.ir import GraphIR
+        if isinstance(ir, str):
+            ir = GraphIR.from_json(ir)
+        elif isinstance(ir, dict):
+            ir = GraphIR.from_dict(ir)
+        return ir.build()
 
     def validate(self) -> None:
         """Check DAG-ness and tensor-shape agreement along every edge."""

@@ -84,10 +84,10 @@ def optimize(graph: LayerGraph, acc: "Accelerator",
     """Compatibility shim: run the GA backend through a ``repro.search``
     session (fixed-seed results are bit-identical to the pre-facade path)."""
     from repro.search.session import SearchSession
-    from repro.search.spec import SearchSpec
-    spec = SearchSpec(workload=graph.name, accelerator=acc.name,
-                      objective=config.objective, backend="ga",
-                      backend_config={"ga_config": config}, seed=config.seed)
-    session = SearchSession(spec, graph=graph, accelerator=acc, em=em)
+    # from_objects records the workload as ir:<fingerprint> (graph.name
+    # may shadow, or be absent from, the registry) and embeds the IR
+    session = SearchSession.from_objects(
+        graph, acc, em=em, objective=config.objective, backend="ga",
+        backend_config={"ga_config": config}, seed=config.seed)
     session.run()
     return session.schedule_result()

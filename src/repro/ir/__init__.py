@@ -1,0 +1,92 @@
+"""``repro.ir`` — the serializable graph IR + importer pipeline.
+
+This package opens the workload side of the system the way ``repro.hw``
+opened the hardware side: a CNN is no longer a Python builder baked into
+the zoo but a *document* — a versioned, JSON-serializable
+:class:`GraphIR` that anything can produce and everything downstream
+(search, cost, serving, artifacts) consumes:
+
+    import repro.ir as ir
+
+    graph = ir.load("model.json").build()          # file -> LayerGraph
+    ir.save(graph, "model.json")                   # LayerGraph -> file
+
+    from repro.ir.trace import from_jax            # code -> IR
+    gir = from_jax(forward, (x, w1, w2), name="my_cnn")
+
+    # or through the facade, with no Python at all:
+    #   repro search --workload file:model.json --accel simba
+
+Pieces:
+
+* :class:`GraphIR` (``graph_ir.py``) — the schema: ordered node records
+  mirroring :class:`repro.core.graph.Layer`, each naming its inputs,
+  plus declared outputs.  ``canonical_json()``/``fingerprint()`` define
+  the byte-stable identity every artifact and store key uses.
+* ``passes.py`` — the import pipeline (:func:`canonicalize` =
+  topo-sort -> fold no-op glue -> dead-node elimination -> validate),
+  idempotent, applied to everything entering from outside.
+* ``trace.py`` — :func:`~repro.ir.trace.from_jax`, a jaxpr walker
+  mapping ``conv_general_dilated`` / ``dot_general`` /
+  ``reduce_window`` / elementwise ops onto Layer kinds.
+
+``load``/``loads`` canonicalize; ``GraphIR.from_graph`` (and
+``LayerGraph.to_ir``) are exact and run no passes — fingerprints always
+describe the structure a genome actually indexes.
+"""
+from __future__ import annotations
+
+from typing import Union
+
+from repro.core.graph import LayerGraph
+
+from repro.ir.graph_ir import IR_VERSION, GraphIR, IRError
+from repro.ir.passes import (PIPELINE, canonicalize, eliminate_dead,
+                             fold_noops, topo_sort, validate)
+
+
+def loads(text: str) -> GraphIR:
+    """Parse GraphIR JSON and run the import pipeline (canonicalized,
+    validated — ready to ``build()``)."""
+    return canonicalize(GraphIR.from_json(text))
+
+
+def load(path: str) -> GraphIR:
+    """Read a GraphIR JSON file and run the import pipeline."""
+    try:
+        with open(path) as f:
+            text = f.read()
+    except OSError as e:
+        raise IRError(f"cannot read workload IR {path!r}: {e}") from None
+    try:
+        return loads(text)
+    except IRError as e:
+        raise IRError(f"{path}: {e}") from None
+
+
+def save(obj: Union[GraphIR, LayerGraph], path: str) -> None:
+    """Write a graph (or IR) as GraphIR JSON (human-indented form)."""
+    ir = GraphIR.from_graph(obj) if isinstance(obj, LayerGraph) else obj
+    with open(path, "w") as f:
+        f.write(ir.to_json())
+
+
+def fingerprint(obj: Union[GraphIR, LayerGraph]) -> str:
+    """The canonical structural fingerprint (see
+    :meth:`GraphIR.fingerprint`)."""
+    ir = GraphIR.from_graph(obj) if isinstance(obj, LayerGraph) else obj
+    return ir.fingerprint()
+
+
+def from_jax(fn, example_args, *, name: str = "traced_cnn") -> GraphIR:
+    """Trace a JAX function into canonical GraphIR (see
+    :mod:`repro.ir.trace`; imports jax lazily)."""
+    from repro.ir.trace import from_jax as _from_jax
+    return _from_jax(fn, example_args, name=name)
+
+
+__all__ = [
+    "GraphIR", "IRError", "IR_VERSION", "PIPELINE", "canonicalize",
+    "eliminate_dead", "fingerprint", "fold_noops", "from_jax", "load",
+    "loads", "save", "topo_sort", "validate",
+]

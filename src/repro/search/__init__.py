@@ -48,19 +48,25 @@ from repro.search.registry import (ACCELERATORS, BACKENDS, COSTMODELS,
                                    OBJECTIVES, WORKLOADS, Registry,
                                    RegistryError, build_accelerator,
                                    build_costmodel, build_workload,
+                                   get_workload, parse_workload_spec,
                                    register_accelerator, register_backend,
                                    register_costmodel, register_objective,
-                                   register_workload)
+                                   register_workload, workload_schemas)
 from repro.search.session import Progress, SearchSession, search
 from repro.search.spec import SearchSpec
+from repro.workloads.base import (FunctionWorkload, Param, Workload,
+                                  WorkloadParamError)
 
 __all__ = [
     "ACCELERATORS", "BACKENDS", "COSTMODELS", "OBJECTIVES", "WORKLOADS",
-    "BackendError", "ExhaustiveBackend", "FingerprintMismatch", "GABackend",
-    "HillClimbBackend", "IslandBackend", "Progress", "RandomBackend",
-    "Registry", "RegistryError", "ScheduleArtifact", "SearchBackend",
-    "SearchSession", "SearchSpec", "build_accelerator", "build_costmodel",
-    "build_workload", "graph_fingerprint", "island_seed",
+    "BackendError", "ExhaustiveBackend", "FingerprintMismatch",
+    "FunctionWorkload", "GABackend", "HillClimbBackend", "IslandBackend",
+    "Param", "Progress", "RandomBackend", "Registry", "RegistryError",
+    "ScheduleArtifact", "SearchBackend", "SearchSession", "SearchSpec",
+    "Workload", "WorkloadParamError", "build_accelerator",
+    "build_costmodel", "build_workload", "get_workload",
+    "graph_fingerprint", "island_seed", "parse_workload_spec",
     "register_accelerator", "register_backend", "register_costmodel",
     "register_objective", "register_workload", "search",
+    "workload_schemas",
 ]

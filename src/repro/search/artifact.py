@@ -12,7 +12,6 @@ so it is an error instead).
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import json
 import time
 from dataclasses import dataclass, field
@@ -34,17 +33,14 @@ class FingerprintMismatch(ValueError):
 
 
 def graph_fingerprint(graph: LayerGraph) -> str:
-    """Stable hash of the graph *structure* the genome indexes: layer
-    geometry in insertion order plus the deduped edge list (the bit order of
-    :class:`repro.core.graph.CompiledGraph`)."""
-    cg = graph.compiled()
-    payload = {
-        "name": graph.name,
-        "layers": [dataclasses.astuple(l) for l in cg.layers],
-        "edges": list(cg.edge_pairs),
-    }
-    blob = json.dumps(payload, sort_keys=True, default=list)
-    return "sha256:" + hashlib.sha256(blob.encode()).hexdigest()
+    """Stable hash of the graph *structure* the genome indexes — the
+    sha256 of the graph's canonical :class:`repro.ir.GraphIR` byte form
+    (layer geometry and input lists in insertion order, which fixes the
+    edge-bit order of :class:`repro.core.graph.CompiledGraph`).  Defined
+    over the serialized IR, so a graph and its exported-then-reimported
+    twin fingerprint identically."""
+    from repro.ir import GraphIR                   # lazy: keeps import light
+    return GraphIR.from_graph(graph).fingerprint()
 
 
 def _cost_to_dict(cost: ScheduleCost) -> Dict[str, Any]:
@@ -90,6 +86,10 @@ class ScheduleArtifact(ImprovementRatios):
     #: per-group CostBreakdown of the winning schedule (group order),
     #: so reports can show where energy/cycles go without re-costing
     group_breakdowns: List[CostBreakdown] = field(default_factory=list)
+    #: the searched graph's :class:`repro.ir.GraphIR` dict — embedded for
+    #: every workload without a registry entry (``file:``/``ir:`` specs)
+    #: so the artifact rebuilds/re-binds with no originating code at all
+    graph_ir: Optional[Dict[str, Any]] = None
     created_unix: int = 0
     version: int = ARTIFACT_VERSION
     #: non-fatal schema degradations seen while loading (pre-cost-breakdown
@@ -120,6 +120,14 @@ class ScheduleArtifact(ImprovementRatios):
         different graphs (the bitmask would index the wrong edges)."""
         fp = graph_fingerprint(graph)
         if fp != self.graph_fingerprint:
+            fmt = fp.split(":", 1)[0]
+            if self.graph_fingerprint.split(":", 1)[0] != fmt:
+                raise FingerprintMismatch(
+                    f"artifact carries a {self.graph_fingerprint.split(':', 1)[0]!r}-"
+                    f"format fingerprint but this build computes {fmt!r} "
+                    f"(the fingerprint moved to the canonical repro.ir "
+                    f"form); the stored genome cannot be safely re-bound "
+                    f"— re-run the search to regenerate the artifact")
             raise FingerprintMismatch(
                 f"artifact genome was searched on graph "
                 f"{self.graph_fingerprint} but {graph.name!r} hashes to {fp}; "
@@ -128,7 +136,16 @@ class ScheduleArtifact(ImprovementRatios):
         return FusionState.from_mask(graph, self.genome_mask)
 
     def rebuild_graph(self) -> LayerGraph:
-        """Rebuild the spec's workload from the registry."""
+        """Rebuild the searched graph: from the embedded IR when present
+        (no registry / file needed), else from the workload spec."""
+        if self.graph_ir is not None:
+            from repro.ir import GraphIR
+            return GraphIR.from_dict(self.graph_ir).build()
+        if self.spec.workload.startswith("ir:"):
+            raise ValueError(
+                f"artifact names embedded-IR workload "
+                f"{self.spec.workload!r} but carries no graph_ir — it was "
+                f"stripped or written by a session that did not embed it")
         from repro.search.registry import build_workload
         return build_workload(self.spec.workload, **self.spec.workload_kwargs)
 
@@ -137,7 +154,7 @@ class ScheduleArtifact(ImprovementRatios):
 
     # ---- serialization ----------------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
-        return {
+        d = {
             "version": self.version,
             "created_unix": self.created_unix,
             "spec": self.spec.to_dict(),
@@ -156,6 +173,9 @@ class ScheduleArtifact(ImprovementRatios):
             "group_breakdowns": [bd.to_dict()
                                  for bd in self.group_breakdowns],
         }
+        if self.graph_ir is not None:     # only self-contained artifacts
+            d["graph_ir"] = self.graph_ir
+        return d
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "ScheduleArtifact":
@@ -207,6 +227,7 @@ class ScheduleArtifact(ImprovementRatios):
             wall_s=d.get("wall_s", 0.0),
             backend_stats=d.get("backend_stats", {}),
             group_breakdowns=breakdowns,
+            graph_ir=d.get("graph_ir"),
             created_unix=d.get("created_unix", 0),
             load_warnings=warnings,
         )
@@ -232,10 +253,12 @@ def make_artifact(spec: SearchSpec, graph: LayerGraph, result,
                   baseline: ScheduleCost, best: ScheduleCost,
                   wall_s: float = 0.0,
                   backend_stats: Optional[Dict[str, Any]] = None,
-                  group_breakdowns: Optional[List[CostBreakdown]] = None
-                  ) -> ScheduleArtifact:
+                  group_breakdowns: Optional[List[CostBreakdown]] = None,
+                  embed_ir: bool = False) -> ScheduleArtifact:
     """Package a finished backend run (``result``: GAResult over fusion
-    genomes) into a durable artifact."""
+    genomes) into a durable artifact.  ``embed_ir`` snapshots the graph's
+    exact :class:`repro.ir.GraphIR` into the artifact (self-contained:
+    report/rebind need no registry)."""
     state: FusionState = result.best_state
     return ScheduleArtifact(
         spec=spec,
@@ -252,5 +275,6 @@ def make_artifact(spec: SearchSpec, graph: LayerGraph, result,
         wall_s=wall_s,
         backend_stats=dict(backend_stats or {}),
         group_breakdowns=list(group_breakdowns or []),
+        graph_ir=graph.to_ir().to_dict() if embed_ir else None,
         created_unix=int(time.time()),
     )

@@ -12,6 +12,18 @@ one decorated function — not another entry-point script:
 
     repro search --workload tiny_cnn --accel simba --backend ga
 
+Workload entries implement the parametric :class:`repro.workloads.base.
+Workload` protocol (param schema + ``build``); bare callables are wrapped
+automatically.  Everywhere a workload name is accepted, three spec forms
+resolve:
+
+* ``name`` or ``name@key=value,key=value`` — a registry entry, with
+  params validated/coerced against its schema (``mobilenet_v3@hw=160``);
+* ``file:model.json`` — a :mod:`repro.ir` GraphIR document imported
+  through the canonicalization pipeline (no registration needed);
+* ``ir:<fingerprint>`` — IR embedded in a search artifact; resolvable
+  only through the artifact that carries it.
+
 Accelerator specs additionally support the paper's Fig. 11 iso-capacity
 repartitioning inline: ``eyeriss@act+64`` moves 64 KiB of weight buffer to
 the activation buffer of the registered ``eyeriss`` template (``-`` moves it
@@ -20,7 +32,9 @@ back), so buffer-sweep experiments need no pre-registered variant per point.
 from __future__ import annotations
 
 import re
-from typing import Dict, Iterator, List, Optional, TypeVar
+from typing import Any, Dict, Iterator, List, Optional, Tuple, TypeVar
+
+from repro.workloads.base import (Workload, WorkloadParamError, as_workload)
 
 T = TypeVar("T")
 
@@ -78,9 +92,15 @@ COSTMODELS = Registry("costmodel")
 
 
 def register_workload(name: str, obj=None, *, replace: bool = False):
-    """Register a ``(**kwargs) -> LayerGraph`` builder (decorator when
-    ``obj`` is omitted)."""
-    return WORKLOADS.register(name, obj, replace=replace)
+    """Register a workload: a :class:`~repro.workloads.base.Workload`
+    (class or instance) or a plain ``(**kwargs) -> LayerGraph`` builder,
+    which is wrapped in a schema-deriving
+    :class:`~repro.workloads.base.FunctionWorkload`.  Decorator when
+    ``obj`` is omitted (returns the original object)."""
+    def _add(o):
+        WORKLOADS.register(name, as_workload(o, name), replace=replace)
+        return o
+    return _add if obj is None else _add(obj)
 
 
 def register_accelerator(name: str, obj=None, *, replace: bool = False):
@@ -110,9 +130,72 @@ def register_costmodel(name: str, obj=None, *, replace: bool = False):
     return COSTMODELS.register(name, obj, replace=replace)
 
 
-def build_workload(name: str, **kwargs):
-    """Build a registered workload's :class:`LayerGraph`."""
-    return WORKLOADS.get(name)(**kwargs)
+_WL_SPEC = re.compile(r"^(?P<name>[^@]+)@(?P<params>.+)$")
+
+
+def parse_workload_spec(spec: str) -> Tuple[str, Dict[str, str]]:
+    """Split ``name[@key=value,key=value...]`` into (name, raw params);
+    values stay strings — the workload's schema coerces them."""
+    m = _WL_SPEC.match(spec)
+    if m is None:
+        if "@" in spec:
+            raise WorkloadParamError(
+                f"malformed workload spec {spec!r}; expected "
+                f"name@key=value[,key=value...]")
+        return spec, {}
+    params: Dict[str, str] = {}
+    for item in m.group("params").split(","):
+        key, sep, value = item.partition("=")
+        key, value = key.strip(), value.strip()
+        if not sep or not key or not value:
+            raise WorkloadParamError(
+                f"malformed param {item!r} in workload spec {spec!r}; "
+                f"expected key=value")
+        if key in params:
+            raise WorkloadParamError(
+                f"duplicate param {key!r} in workload spec {spec!r}")
+        params[key] = value
+    return m.group("name"), params
+
+
+def get_workload(name: str) -> Workload:
+    """Resolve a registered workload to the protocol object (wrapping
+    legacy bare-callable entries on the fly)."""
+    return as_workload(WORKLOADS.get(name), name)
+
+
+def build_workload(spec: str, **kwargs):
+    """Build a workload's :class:`LayerGraph` from any spec form:
+    registry ``name[@key=value,...]`` (params schema-checked) or a
+    ``file:model.json`` GraphIR document.  ``kwargs`` merge with (and
+    must not collide with) spec-string params."""
+    if spec.startswith("file:"):
+        if kwargs:
+            raise WorkloadParamError(
+                f"file: workload specs take no params "
+                f"(got {sorted(kwargs)}); edit the IR document instead")
+        from repro.ir import load
+        from repro.workloads.base import GraphIRWorkload
+        return GraphIRWorkload(load(spec[len("file:"):])).build()
+    if spec.startswith("ir:"):
+        raise RegistryError(
+            f"workload spec {spec!r} names IR embedded in a search "
+            f"artifact; it has no registry entry — rebuild it from the "
+            f"artifact (ScheduleArtifact.rebuild_graph / repro report)")
+    name, raw = parse_workload_spec(spec)
+    workload = get_workload(name)
+    overlap = sorted(set(raw) & set(kwargs))
+    if overlap:
+        raise WorkloadParamError(
+            f"param(s) {overlap} given both in spec {spec!r} and in "
+            f"workload_kwargs; pick one place")
+    return workload.build(**{**raw, **kwargs})
+
+
+def workload_schemas() -> Dict[str, Dict[str, Any]]:
+    """Machine-readable registry view: every workload's doc line + param
+    schema (what ``repro list --json`` emits)."""
+    return {name: get_workload(name).describe() for name in WORKLOADS}
 
 
 def build_costmodel(name: str):
@@ -144,7 +227,7 @@ def _install_builtins() -> None:
 
     for wname, builder in _ZOO.items():
         if wname not in WORKLOADS:
-            WORKLOADS.register(wname, builder)
+            WORKLOADS.register(wname, as_workload(builder, wname))
     for aname, spec in ALL_SPECS.items():
         if aname not in ACCELERATORS:
             # the hierarchical description is the source of truth; the

@@ -62,8 +62,15 @@ class SearchSession:
 
     def __init__(self, spec: SearchSpec, *, graph: Optional[LayerGraph] = None,
                  accelerator: Optional[Accelerator] = None,
-                 em: Optional[EnergyModel] = None):
+                 em: Optional[EnergyModel] = None,
+                 embed_ir: Optional[bool] = None):
         self.spec = spec
+        # artifacts for workloads with no registry entry (file: documents,
+        # direct graphs recorded as ir:<fingerprint>) embed the canonical
+        # GraphIR so they stay reproducible anywhere; registry workloads
+        # can opt in (embed_ir=True / CLI --embed-ir)
+        self.embed_ir = bool(embed_ir) if embed_ir is not None else \
+            spec.workload.startswith(("file:", "ir:"))
         # resolve everything eagerly so bad names fail at session creation,
         # not generations into a search
         if "seed" in spec.backend_config or "observer" in spec.backend_config:
@@ -105,10 +112,15 @@ class SearchSession:
                      spec: Optional[SearchSpec] = None, *,
                      em: Optional[EnergyModel] = None,
                      **spec_kwargs) -> "SearchSession":
-        """Session over pre-built objects (graphs not in the registry);
-        the spec records their names for provenance."""
+        """Session over pre-built objects (graphs not in the registry).
+
+        The fabricated spec records the workload as ``ir:<fingerprint>``
+        — not the graph's bare name, which may collide with (or be absent
+        from) the registry — and the artifact embeds the graph's IR, so
+        the result is reproducible without the code that built it."""
         if spec is None:
-            spec = SearchSpec(workload=graph.name,
+            from repro.search.artifact import graph_fingerprint
+            spec = SearchSpec(workload=f"ir:{graph_fingerprint(graph)}",
                               accelerator=accelerator.name, **spec_kwargs)
         return cls(spec, graph=graph, accelerator=accelerator, em=em)
 
@@ -151,7 +163,7 @@ class SearchSession:
             self.spec, self.graph, self.result,
             baseline=self.evaluator.layerwise(), best=best_cost,
             wall_s=wall_s, backend_stats=self.evaluator.cache_stats(),
-            group_breakdowns=breakdowns)
+            group_breakdowns=breakdowns, embed_ir=self.embed_ir)
         return self.artifact
 
     # ---- compatibility ----------------------------------------------------------

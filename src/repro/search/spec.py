@@ -19,7 +19,11 @@ class SearchSpec:
     (backend + config, seed, budget).
 
     ``workload``/``accelerator``/``objective``/``backend``/``costmodel``
-    are registry names (``repro.search.registry``); ``accelerator`` may
+    are registry names (``repro.search.registry``); ``workload`` accepts
+    every spec form — ``name``, ``name@key=value,...`` (params coerced
+    against the workload's schema), ``file:model.json`` (a
+    ``repro.ir`` GraphIR document), or ``ir:<fingerprint>`` (IR embedded
+    in the producing artifact); ``accelerator`` may
     carry a repartition suffix (``eyeriss@act+64``); ``costmodel`` picks
     the cost backend scoring the schedules (``default`` = the paper's
     mini-Timeloop mapper, ``tpu`` = the TPU roofline).  ``budget`` stops

@@ -15,6 +15,12 @@ requests and resolves each one the cheapest way available:
 
 The CLI speaks this layer: ``repro serve --requests jobs.json`` drains a
 batch, ``repro submit`` is the single-request path.
+
+Job specs name workloads in any ``repro.search.registry`` spec form —
+registry names with inline params (``mobilenet_v3@hw=160``) or
+``file:model.json`` GraphIR documents — so external models batch-schedule
+without registration.  (``ir:<fingerprint>`` specs are artifact-bound and
+fail the job with the error explaining where to rebuild from.)
 """
 from __future__ import annotations
 
@@ -156,7 +162,25 @@ class BatchScheduler:
                 self._serve(job, hit, "cache_hit")
             else:
                 to_search.append(job)
-        self._run_searches(to_search, fingerprints)
+        # second dedup level, by normalized store key: specs whose raw
+        # hashes differ but that address the same object (the same IR
+        # document under two file: paths) collapse onto one search
+        unique: List[Job] = []
+        key_primary: Dict[str, Job] = {}
+        key_dups: List[tuple] = []
+        for job in to_search:
+            key = artifact_key(fingerprints[job.id], job.spec)
+            if key in key_primary:
+                key_dups.append((job, key_primary[key]))
+            else:
+                key_primary[key] = job
+                unique.append(job)
+        self._run_searches(unique, fingerprints)
+        for job, primary in key_dups:
+            if primary.status == "failed":
+                self._fail(job, primary.error)
+            else:
+                self._serve(job, primary.artifact, "cache_hit")
         # duplicates inherit their primary's resolution as a served hit
         for job in pending:
             if not job.deduped:

@@ -55,7 +55,16 @@ def spec_hash(spec: SearchSpec) -> str:
 
 def artifact_key(graph_fingerprint: str, spec: SearchSpec) -> str:
     """The store key: sha256 over (graph fingerprint, canonical spec
-    hash).  Content-addressed — no counters, no registration order."""
+    hash).  Content-addressed — no counters, no registration order.
+
+    ``file:``/``ir:`` workload specs are normalized to
+    ``ir:<fingerprint>`` before hashing: the graph fingerprint already
+    pins the content, so the same model submitted under two filenames
+    (or re-exported elsewhere) addresses one object instead of paying a
+    second search."""
+    if spec.workload.startswith(("file:", "ir:")):
+        spec = spec.replace(workload=f"ir:{graph_fingerprint}",
+                            workload_kwargs={})
     blob = f"{graph_fingerprint}\n{spec_hash(spec)}"
     return hashlib.sha256(blob.encode()).hexdigest()
 
@@ -128,8 +137,11 @@ class ArtifactStore:
         if art is None:
             self.misses += 1
             return None
+        # recompute the stored spec's canonical key rather than comparing
+        # raw spec hashes: file: specs under different paths are the same
+        # request when their graphs fingerprint identically
         if art.graph_fingerprint != graph_fingerprint or \
-                spec_hash(art.spec) != spec_hash(spec):
+                artifact_key(art.graph_fingerprint, art.spec) != key:
             raise StoreError(
                 f"store object {key} does not match its key (expected "
                 f"fingerprint {graph_fingerprint}, spec {spec.to_dict()}); "

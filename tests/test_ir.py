@@ -1,0 +1,745 @@
+"""`repro.ir`: GraphIR round-trips, the canonicalization pipeline, workload
+spec parsing, the parametric Workload protocol, embedded-IR artifacts, and
+the JAX tracer."""
+import json
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro.ir as ir
+from repro.core.graph import Layer, LayerGraph
+from repro.costmodel import SIMBA
+from repro.ir import GraphIR, IRError, canonicalize
+from repro.search import (RegistryError, ScheduleArtifact, SearchSession,
+                          WorkloadParamError, build_workload, get_workload,
+                          graph_fingerprint, parse_workload_spec)
+from repro.workloads import mobilenet_v3_large, resnet50, unet, vgg16
+
+try:
+    import jax  # noqa: F401
+    HAVE_JAX = True
+except ImportError:
+    HAVE_JAX = False
+
+
+def small_chain(n=5, c0=3, hw=16) -> LayerGraph:
+    g = LayerGraph("small_chain")
+    prev = g.add(Layer(name="input", kind="input", m=c0, p=hw, q=hw))
+    c = c0
+    for i in range(n):
+        prev = g.add(Layer(name=f"conv{i}", kind="conv", c=c, h=hw, w=hw,
+                           m=8, p=hw, q=hw, r=3, s=3, padding=(1, 1)),
+                     [prev])
+        c = 8
+    return g
+
+
+# ---- round-trips ------------------------------------------------------------------
+
+@pytest.mark.parametrize("builder,kw", [
+    (vgg16, {"hw": 64}), (unet, {"hw": 64}),
+    (mobilenet_v3_large, {}), (resnet50, {}),
+])
+def test_zoo_round_trip_preserves_structure_and_fingerprint(builder, kw):
+    g = builder(**kw)
+    text = g.to_ir().to_json()
+    g2 = ir.loads(text).build()
+    assert graph_fingerprint(g2) == graph_fingerprint(g)
+    assert g2.compiled().edge_pairs == g.compiled().edge_pairs
+    assert [tuple(sorted(l.__dict__.items())) for l in g2.layers.values()] \
+        == [tuple(sorted(l.__dict__.items())) for l in g.layers.values()]
+    # export of a canonical graph is byte-stable (file: round-trips clean)
+    assert ir.loads(text).build().to_ir().to_json() == text
+
+
+def test_from_ir_accepts_json_dict_and_object():
+    g = small_chain()
+    gir = g.to_ir()
+    for form in (gir, gir.to_dict(), gir.to_json()):
+        assert graph_fingerprint(LayerGraph.from_ir(form)) \
+            == graph_fingerprint(g)
+
+
+_KINDS = ("conv", "dwconv", "fc", "pool", "add", "concat", "upsample",
+          "global_pool", "mul", "input")
+
+
+@st.composite
+def graph_irs(draw):
+    """Arbitrary (not necessarily shape-consistent) DAGs in node order —
+    the serialization layer must round-trip anything structurally sane."""
+    n = draw(st.integers(min_value=1, max_value=8))
+    nodes = []
+    for i in range(n):
+        n_in = 0 if i == 0 else draw(st.integers(min_value=0, max_value=2))
+        inputs = sorted({f"n{draw(st.integers(min_value=0, max_value=i - 1))}"
+                         for _ in range(n_in)}) if i else []
+        node = {"name": f"n{i}", "kind": draw(st.sampled_from(_KINDS)),
+                "inputs": inputs}
+        if draw(st.booleans()):
+            node["c"] = draw(st.integers(min_value=0, max_value=512))
+            node["h"] = draw(st.integers(min_value=0, max_value=64))
+        if draw(st.booleans()):
+            node["stride"] = [draw(st.integers(min_value=1, max_value=3))] * 2
+        nodes.append(node)
+    return GraphIR(name="rand", nodes=nodes, outputs=[f"n{n - 1}"])
+
+
+@settings(max_examples=40)
+@given(graph_irs())
+def test_hypothesis_serialize_parse_serialize_bit_stable(gir):
+    text = gir.to_json()
+    again = GraphIR.from_json(text)
+    assert again.to_json() == text
+    assert again.fingerprint() == gir.fingerprint()
+    assert GraphIR.from_json(again.to_json()).canonical_json() \
+        == gir.canonical_json()
+
+
+def test_ir_rejects_unknown_fields_and_bad_version():
+    g = small_chain(2)
+    d = g.to_ir().to_dict()
+    with pytest.raises(IRError, match="ir_version"):
+        GraphIR.from_dict({**d, "ir_version": 99})
+    with pytest.raises(IRError, match="unknown GraphIR fields"):
+        GraphIR.from_dict({**d, "turbo": 1})
+    bad = {**d, "nodes": [{**d["nodes"][0], "flux": 3}]}
+    with pytest.raises(IRError, match="unknown fields"):
+        GraphIR.from_dict(bad).build()
+    with pytest.raises(IRError, match="expected an object"):
+        GraphIR.from_dict({**d, "nodes": [3]})
+    with pytest.raises(IRError, match="not valid JSON"):
+        GraphIR.from_json("{nope")
+
+
+# ---- canonicalization pipeline ----------------------------------------------------
+
+def test_topo_sort_is_stable_and_fixes_order():
+    g = small_chain(4)
+    gir = g.to_ir()
+    assert ir.topo_sort(gir).nodes == gir.nodes      # already sorted: no-op
+    shuffled = GraphIR(name=gir.name, nodes=list(reversed(gir.nodes)),
+                       outputs=gir.outputs)
+    sorted_ir = ir.topo_sort(shuffled)
+    assert [n["name"] for n in sorted_ir.nodes] \
+        == [n["name"] for n in gir.nodes]
+    # and the unsorted form cannot build directly
+    with pytest.raises(IRError, match="topo-sort"):
+        shuffled.build()
+
+
+def test_topo_sort_rejects_cycles_and_unknown_inputs():
+    nodes = [{"name": "a", "kind": "conv", "inputs": ["b"]},
+             {"name": "b", "kind": "conv", "inputs": ["a"]}]
+    with pytest.raises(IRError, match="cycle"):
+        ir.topo_sort(GraphIR(name="x", nodes=nodes))
+    with pytest.raises(IRError, match="unknown input"):
+        ir.topo_sort(GraphIR(name="x", nodes=[
+            {"name": "a", "kind": "conv", "inputs": ["ghost"]}]))
+    with pytest.raises(IRError, match="duplicate"):
+        ir.topo_sort(GraphIR(name="x", nodes=[
+            {"name": "a", "kind": "conv", "inputs": []},
+            {"name": "a", "kind": "conv", "inputs": []}]))
+
+
+def test_fold_noops_removes_identity_glue():
+    g = small_chain(2)
+    gir = g.to_ir()
+    # splice an identity pool between conv0 and conv1
+    id_pool = {"name": "noop", "kind": "pool", "inputs": ["conv0"],
+               "c": 8, "h": 16, "w": 16, "m": 8, "p": 16, "q": 16,
+               "r": 1, "s": 1, "stride": [1, 1]}
+    nodes = []
+    for n in gir.nodes:
+        nodes.append(dict(n))
+        if n["name"] == "conv0":
+            nodes.append(id_pool)
+    nodes[-1]["inputs"] = ["noop"]
+    spliced = GraphIR(name="g", nodes=nodes, outputs=["conv1"])
+    folded = canonicalize(spliced)
+    assert [n["name"] for n in folded.nodes] \
+        == [n["name"] for n in gir.nodes]
+    assert folded.build().preds("conv1") == ["conv0"]
+    # a real pool (k=2) is NOT folded
+    real = dict(id_pool, r=2, s=2, stride=[2, 2], p=8, q=8)
+    kept = canonicalize(GraphIR(name="g", nodes=[
+        *(dict(n) for n in gir.nodes[:2]), real], outputs=["noop"]))
+    assert "noop" in [n["name"] for n in kept.nodes]
+
+
+def test_eliminate_dead_drops_unreachable_branch():
+    g = small_chain(3)
+    gir = g.to_ir()
+    dead = {"name": "dead_conv", "kind": "conv", "inputs": ["conv0"],
+            "c": 8, "h": 16, "w": 16, "m": 4, "p": 16, "q": 16,
+            "r": 1, "s": 1}
+    spliced = GraphIR(name=gir.name, nodes=[*gir.nodes, dead],
+                      outputs=["conv2"])
+    pruned = canonicalize(spliced)
+    assert "dead_conv" not in [n["name"] for n in pruned.nodes]
+    assert pruned.fingerprint() == gir.fingerprint()
+    # without declared outputs every sink survives
+    assert "dead_conv" in [
+        n["name"] for n in
+        canonicalize(GraphIR(name=gir.name, nodes=[*gir.nodes,
+                                                   dead])).nodes]
+
+
+def test_eliminate_dead_rejects_unknown_output_names():
+    """A typo'd output must raise, not silently prune the branch (or the
+    whole graph) it was meant to keep alive."""
+    gir = small_chain(3).to_ir()
+    with pytest.raises(IRError, match="conv2_typo"):
+        canonicalize(GraphIR(name=gir.name, nodes=gir.nodes,
+                             outputs=["conv2_typo"]))
+    with pytest.raises(IRError, match="aux_typo"):
+        ir.loads(GraphIR(name=gir.name, nodes=gir.nodes,
+                         outputs=["conv2", "aux_typo"]).to_json())
+
+
+def test_non_sink_outputs_survive_round_trip():
+    """Multi-head models declare an intermediate node as an output; the
+    build->export round-trip must keep it (and the fingerprint) intact."""
+    gir = small_chain(3).to_ir()
+    multi = canonicalize(GraphIR(name=gir.name, nodes=gir.nodes,
+                                 outputs=["conv1", "conv2"]))
+    assert multi.outputs == ["conv1", "conv2"]
+    g = multi.build()
+    assert g.outputs == ["conv1", "conv2"]
+    again = g.to_ir()
+    assert again.outputs == ["conv1", "conv2"]
+    assert again.fingerprint() == multi.fingerprint()
+    assert ir.loads(multi.to_json()).build().to_ir().to_json() \
+        == multi.to_json()
+    # and the declared-output set is part of the identity
+    assert multi.fingerprint() != gir.fingerprint()
+
+
+def test_store_key_is_content_addressed_for_file_specs(tmp_path):
+    """The same IR document under two filenames is one store object: the
+    second submit must be a cache hit, not a second search."""
+    from repro.search import SearchSpec
+    from repro.serve import ArtifactStore, BatchScheduler
+    a, b = tmp_path / "a.json", tmp_path / "sub" / "b.json"
+    b.parent.mkdir()
+    ir.save(small_chain(), str(a))
+    b.write_text(a.read_text())
+    store = ArtifactStore(str(tmp_path / "store"))
+    cfg = {"evaluations": 5}
+    sched = BatchScheduler(store)
+    sched.submit(SearchSpec(workload=f"file:{a}", backend="random",
+                            backend_config=cfg))
+    out1 = sched.run()
+    assert out1.jobs[0].outcome == "searched"
+    sched2 = BatchScheduler(store)
+    sched2.submit(SearchSpec(workload=f"file:{b}", backend="random",
+                             backend_config=cfg))
+    out2 = sched2.run()
+    assert out2.jobs[0].outcome == "cache_hit"
+    assert out2.jobs[0].key == out1.jobs[0].key
+    assert len(store) == 1
+    # and within ONE batch: two paths, same content -> one search
+    store2 = ArtifactStore(str(tmp_path / "store2"))
+    sched3 = BatchScheduler(store2)
+    for path in (a, b):
+        sched3.submit(SearchSpec(workload=f"file:{path}",
+                                 backend="random", backend_config=cfg))
+    out3 = sched3.run()
+    assert [j.outcome for j in out3.jobs] == ["searched", "cache_hit"]
+    assert sched3.searches_run == 1 and len(store2) == 1
+
+
+def test_canonicalize_idempotent_on_zoo():
+    gir = vgg16(hw=64).to_ir()
+    once = canonicalize(gir)
+    assert once.canonical_json() == gir.canonical_json()
+    assert canonicalize(once).canonical_json() == once.canonical_json()
+
+
+def test_validate_rejects_channel_mismatch():
+    nodes = [{"name": "input", "kind": "input", "m": 3, "p": 8, "q": 8},
+             {"name": "c1", "kind": "conv", "inputs": ["input"],
+              "c": 3, "h": 8, "w": 8, "m": 8, "p": 8, "q": 8},
+             {"name": "c2", "kind": "conv", "inputs": ["c1"],
+              "c": 99, "h": 8, "w": 8, "m": 8, "p": 8, "q": 8}]
+    with pytest.raises(IRError, match="channel mismatch"):
+        canonicalize(GraphIR(name="bad", nodes=nodes))
+
+
+# ---- fixed-seed pin: IR round-trip does not perturb search ------------------------
+
+def test_search_on_reimported_zoo_graph_is_bit_identical():
+    """Export->reimport must leave the searched structure untouched: a
+    fixed-seed GA over the reimported graph returns the same genome,
+    history, and fitness bit-for-bit."""
+    g = vgg16(hw=64)
+    g2 = ir.loads(g.to_ir().to_json()).build()
+    runs = []
+    for graph in (g, g2):
+        art = SearchSession.from_objects(
+            graph, SIMBA, backend="ga", seed=0,
+            backend_config={"preset": "fast", "generations": 5}).run()
+        runs.append(art)
+    a, b = runs
+    assert a.genome_mask == b.genome_mask
+    assert a.best_fitness == b.best_fitness
+    assert a.history == b.history
+    assert a.graph_fingerprint == b.graph_fingerprint
+    assert a.spec == b.spec            # ir:<fp> specs agree too
+
+
+# ---- workload spec strings --------------------------------------------------------
+
+def test_parse_workload_spec_forms():
+    assert parse_workload_spec("vgg16") == ("vgg16", {})
+    assert parse_workload_spec("mobilenet_v3@hw=160") \
+        == ("mobilenet_v3", {"hw": "160"})
+    assert parse_workload_spec("unet@hw=64,depth=2") \
+        == ("unet", {"hw": "64", "depth": "2"})
+    for bad in ("w@", "w@hw", "w@hw=", "w@=3", "w@hw=1,hw=2"):
+        with pytest.raises(WorkloadParamError):
+            parse_workload_spec(bad)
+
+
+@settings(max_examples=30)
+@given(st.sampled_from(["vgg16", "unet", "mobilenet_v3", "resnet50"]),
+       st.integers(min_value=1, max_value=6))
+def test_spec_param_round_trip_property(name, n):
+    hw = 32 * n
+    spec = f"{name}@hw={hw}"
+    parsed_name, params = parse_workload_spec(spec)
+    assert parsed_name == name and params == {"hw": str(hw)}
+    # spec-string build == kwargs build, structurally
+    assert graph_fingerprint(build_workload(spec)) \
+        == graph_fingerprint(build_workload(name, hw=hw))
+
+
+def test_build_workload_errors_list_schema_and_names():
+    with pytest.raises(RegistryError, match="vgg16"):
+        build_workload("not_a_net")
+    with pytest.raises(WorkloadParamError) as e:
+        build_workload("unet@res=64")
+    msg = str(e.value)
+    assert "hw=256 (int)" in msg and "depth=4 (int)" in msg
+    assert "unet@hw=256" in msg               # copy-pasteable fix
+    with pytest.raises(WorkloadParamError, match="cannot parse"):
+        build_workload("unet@hw=big")
+    with pytest.raises(WorkloadParamError, match="both in spec"):
+        build_workload("unet@hw=64", hw=64)
+
+
+def test_build_workload_file_spec(tmp_path):
+    path = tmp_path / "m.json"
+    ir.save(small_chain(), str(path))
+    g = build_workload(f"file:{path}")
+    assert graph_fingerprint(g) == graph_fingerprint(small_chain())
+    with pytest.raises(WorkloadParamError, match="no params"):
+        build_workload(f"file:{path}", hw=3)
+    with pytest.raises(IRError, match="cannot read"):
+        build_workload(f"file:{tmp_path / 'ghost.json'}")
+
+
+def test_ir_spec_unresolvable_from_registry():
+    with pytest.raises(RegistryError, match="embedded"):
+        build_workload("ir:sha256:abc")
+
+
+def test_function_workload_pep563_string_annotations_coerce():
+    """Builders in `from __future__ import annotations` modules carry
+    string annotations; the schema must still type (and coerce) them."""
+    from repro.workloads import FunctionWorkload
+
+    def builder(hw, depth=2):
+        return small_chain(depth, hw=hw)
+    builder.__annotations__ = {"hw": "int"}        # what PEP 563 produces
+    wl = FunctionWorkload("pep563", builder)
+    assert wl.params()["hw"].kind == "int"
+    assert wl.params()["hw"].required
+    g = wl.build(hw="24")                          # spec-string path
+    assert g.layers["input"].p == 24               # int, not "24"
+
+
+def test_function_workload_var_kwargs_passes_unknown_params():
+    """A documented bare ``(**kwargs) -> LayerGraph`` builder must keep
+    accepting arbitrary params (open schema), not reject everything."""
+    from repro.workloads import FunctionWorkload
+    wl = FunctionWorkload("open", lambda **kw: small_chain(**kw))
+    assert wl.open_schema and wl.params() == {}
+    assert wl.build(n=2, hw=8).layers["input"].p == 8
+    assert wl.describe()["open_schema"] is True
+    # explicit params still coerce; extras pass through beside them
+    wl2 = FunctionWorkload("mixed",
+                           lambda n=3, **kw: small_chain(n, **kw))
+    g = wl2.build(n="2", hw=8)
+    assert len(g.compute_layers()) == 2
+
+
+def test_pre_ir_fingerprint_format_gets_distinct_error():
+    g = small_chain()
+    art = SearchSession.from_objects(
+        g, SIMBA, backend="random",
+        backend_config={"evaluations": 5}).run()
+    assert art.graph_fingerprint.startswith("ir1:")
+    from repro.search import FingerprintMismatch
+    stale = ScheduleArtifact.from_dict(
+        {**art.to_dict(), "graph_fingerprint": "sha256:" + "0" * 64})
+    with pytest.raises(FingerprintMismatch, match="format"):
+        stale.state(g)
+
+
+def test_function_workload_schema_derivation():
+    wl = get_workload("unet")
+    schema = wl.params()
+    assert schema["hw"].kind == "int" and schema["hw"].default == 256
+    assert set(schema) == {"hw", "base_ch", "depth", "in_ch", "out_ch"}
+    # string values coerce per schema (spec-string path)
+    g = wl.build(hw="64", depth="2")
+    assert g.name == "unet"
+    d = wl.describe()
+    assert d["params"]["depth"] == {"default": 4, "type": "int",
+                                    "required": False}
+
+
+# ---- embedded-IR artifacts --------------------------------------------------------
+
+def test_direct_graph_artifact_is_reproducible_without_registry(tmp_path):
+    """The session.py satellite: a direct-graph search must not fabricate
+    a registry workload name; it records ir:<fp> and embeds the IR."""
+    g = small_chain()
+    art = SearchSession.from_objects(
+        g, SIMBA, backend="random",
+        backend_config={"evaluations": 10}).run()
+    assert art.spec.workload == f"ir:{graph_fingerprint(g)}"
+    assert art.graph_ir is not None
+    path = tmp_path / "a.json"
+    art.save(str(path))
+    loaded = ScheduleArtifact.load(str(path))
+    # rebind with no registry entry, no file, no builder code
+    state = loaded.rebuild_state()
+    assert state.mask == art.genome_mask
+    # stripping the IR makes the failure explicit, not silent
+    d = loaded.to_dict()
+    del d["graph_ir"]
+    with pytest.raises(ValueError, match="graph_ir"):
+        ScheduleArtifact.from_dict(d).rebuild_graph()
+
+
+def test_registry_artifact_embeds_ir_only_on_request(tmp_path):
+    from repro.search import search
+    art = search("vgg16", "simba", backend="random",
+                 workload_kwargs={"hw": 64},
+                 backend_config={"evaluations": 5})
+    assert art.graph_ir is None           # registry spec: stays compact
+    assert "graph_ir" not in art.to_dict()
+    spec = art.spec
+    sess = SearchSession(spec, embed_ir=True)
+    art2 = sess.run()
+    assert art2.graph_ir is not None
+    rebuilt = ScheduleArtifact.from_json(art2.to_json()).rebuild_graph()
+    assert graph_fingerprint(rebuilt) == art2.graph_fingerprint
+
+
+def test_file_spec_artifact_embeds_ir_automatically(tmp_path):
+    path = tmp_path / "m.json"
+    ir.save(small_chain(), str(path))
+    from repro.search import search
+    art = search(f"file:{path}", "simba", backend="random",
+                 backend_config={"evaluations": 5})
+    assert art.graph_ir is not None
+    path.unlink()                          # file gone: artifact still works
+    assert art.rebuild_state().mask == art.genome_mask
+
+
+# ---- CLI --------------------------------------------------------------------------
+
+def test_cli_export_file_search_report(tmp_path):
+    from repro.__main__ import main
+    model = tmp_path / "vgg64.json"
+    art = tmp_path / "a.json"
+    assert main(["export", "--workload", "vgg16@hw=64",
+                 "--out", str(model)]) == 0
+    assert main(["search", "--workload", f"file:{model}",
+                 "--backend", "random", "--backend-config",
+                 '{"evaluations": 10}', "--out", str(art)]) == 0
+    assert main(["report", str(art), "--schedule"]) == 0
+    # export round-trips byte-identically through file:
+    rt = tmp_path / "rt.json"
+    assert main(["export", "--workload", f"file:{model}",
+                 "--out", str(rt)]) == 0
+    assert rt.read_text() == model.read_text()
+    # bad spec strings exit 2 with the schema in the message
+    assert main(["export", "--workload", "vgg16@res=64",
+                 "--out", str(model)]) == 2
+
+
+def test_cli_list_json_is_machine_readable(capsys):
+    from repro.__main__ import main
+    assert main(["list", "--json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert set(payload) >= {"workloads", "accelerators", "objectives",
+                            "backends", "costmodels"}
+    assert payload["workloads"]["unet"]["params"]["hw"]["type"] == "int"
+    assert "simba" in payload["accelerators"]
+    assert "ga" in payload["backends"]
+    assert payload["backends"]["island"]["doc"]
+
+
+def test_cli_embed_ir_flag(tmp_path):
+    from repro.__main__ import main
+    out = tmp_path / "e.json"
+    assert main(["search", "--workload", "vgg16", "--workload-kwargs",
+                 '{"hw": 64}', "--backend", "random", "--backend-config",
+                 '{"evaluations": 5}', "--embed-ir", "--out",
+                 str(out)]) == 0
+    assert ScheduleArtifact.load(str(out)).graph_ir is not None
+
+
+# ---- JAX tracer -------------------------------------------------------------------
+
+@pytest.mark.skipif(not HAVE_JAX, reason="jax not installed")
+class TestFromJax:
+    def _tiny(self):
+        import jax.numpy as jnp
+        from jax import lax
+
+        def cnn(x, w1, w2, w3):
+            y = lax.conv_general_dilated(x, w1, (1, 1), "SAME")
+            y = jnp.maximum(y, 0.0)
+            y = lax.reduce_window(y, -jnp.inf, lax.max,
+                                  (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+            y = lax.conv_general_dilated(y, w2, (1, 1), "SAME")
+            y = jnp.maximum(y, 0.0)
+            y = jnp.mean(y, axis=(2, 3))
+            return y.reshape(1, -1) @ w3
+
+        args = (jnp.zeros((1, 3, 32, 32)), jnp.zeros((8, 3, 3, 3)),
+                jnp.zeros((16, 8, 3, 3)), jnp.zeros((16, 10)))
+        return cnn, args
+
+    def test_trace_maps_primitives_to_layer_kinds(self):
+        fn, args = self._tiny()
+        gir = ir.from_jax(fn, args, name="tiny")
+        kinds = [n["kind"] for n in gir.nodes]
+        assert kinds == ["input", "conv", "pool", "conv", "global_pool",
+                         "fc"]
+        g = gir.build()
+        g.validate()
+        conv = g.layers[gir.nodes[1]["name"]]
+        assert (conv.c, conv.h, conv.w, conv.m, conv.r) == (3, 32, 32, 8, 3)
+        fc = g.layers[gir.nodes[-1]["name"]]
+        assert (fc.c, fc.m) == (16, 10)
+
+    def test_trace_is_deterministic_and_searchable(self):
+        fn, args = self._tiny()
+        g1, g2 = (ir.from_jax(fn, args, name="t").build() for _ in range(2))
+        assert graph_fingerprint(g1) == graph_fingerprint(g2)
+        art = SearchSession.from_objects(
+            g1, SIMBA, backend="exhaustive").run()
+        assert art.best_fitness >= 1.0
+
+    def test_trace_depthwise_and_residual(self):
+        import jax.numpy as jnp
+        from jax import lax
+
+        def block(x, wdw, wpw):
+            y = lax.conv_general_dilated(x, wdw, (1, 1), "SAME",
+                                         feature_group_count=8)
+            y = lax.conv_general_dilated(y, wpw, (1, 1), "SAME")
+            return x + y
+
+        gir = ir.from_jax(block, (jnp.zeros((1, 8, 16, 16)),
+                                  jnp.zeros((8, 1, 3, 3)),
+                                  jnp.zeros((8, 8, 1, 1))), name="res")
+        kinds = [n["kind"] for n in gir.nodes]
+        assert kinds == ["input", "dwconv", "conv", "add"]
+        add = gir.nodes[-1]
+        assert set(add["inputs"]) == {gir.nodes[0]["name"],
+                                      gir.nodes[2]["name"]}
+
+    def test_trace_through_jit_and_nhwc(self):
+        import jax
+        import jax.numpy as jnp
+        from jax import lax
+
+        def f(x, w):
+            conv = jax.jit(lambda a: lax.conv_general_dilated(
+                a, w, (2, 2), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC")))
+            return jax.nn.relu(conv(x))
+
+        gir = ir.from_jax(f, (jnp.zeros((1, 16, 16, 3)),
+                              jnp.zeros((3, 3, 3, 4))), name="nhwc")
+        assert [n["kind"] for n in gir.nodes] == ["input", "conv"]
+        conv = gir.nodes[1]
+        assert (conv["c"], conv["h"], conv["w"]) == (3, 16, 16)
+        assert (conv["m"], conv["p"], conv["q"]) == (4, 8, 8)
+        assert conv["stride"] == [2, 2]
+
+    def test_trace_squeeze_excite_keeps_the_branch(self):
+        """y * se(y) with se broadcasting from (1,C,1,1) is a real mul
+        layer — the SE branch must not be silently dead-eliminated."""
+        import jax.numpy as jnp
+        from jax import lax
+
+        def se_block(x, w, wfc1, wfc2):
+            y = lax.conv_general_dilated(x, w, (1, 1), "SAME")
+            s = jnp.mean(y, axis=(2, 3))               # (1, C) squeeze
+            s = jax.nn.sigmoid((s @ wfc1) @ wfc2)
+            return y * s.reshape(1, -1, 1, 1)          # broadcast excite
+
+        import jax
+        gir = ir.from_jax(se_block, (jnp.zeros((1, 4, 8, 8)),
+                                     jnp.zeros((8, 4, 3, 3)),
+                                     jnp.zeros((8, 2)),
+                                     jnp.zeros((2, 8))), name="se")
+        kinds = [n["kind"] for n in gir.nodes]
+        assert kinds == ["input", "conv", "global_pool", "fc", "fc",
+                         "mul"]
+        mul = gir.nodes[-1]
+        assert len(mul["inputs"]) == 2                 # conv + fc branch
+        assert (mul["c"], mul["h"], mul["w"]) == (8, 8, 8)
+
+    def test_trace_1d_pool_is_not_squared(self):
+        import jax.numpy as jnp
+        from jax import lax
+
+        def f(x):
+            return lax.reduce_window(x, -jnp.inf, lax.max,
+                                     (1, 1, 1, 2), (1, 1, 1, 2), "VALID")
+
+        gir = ir.from_jax(f, (jnp.zeros((1, 8, 32, 32)),), name="pool1d")
+        pool = gir.nodes[-1]
+        assert (pool["r"], pool["s"]) == (1, 2)
+        assert (pool["p"], pool["q"]) == (32, 16)      # only W halves
+        assert pool["stride"] == [1, 2]
+
+    def test_trace_rejects_activation_x_activation_matmul(self):
+        import jax.numpy as jnp
+        from jax import lax
+        from repro.ir.trace import TraceError
+
+        def attn(x, wq, wk):
+            a = lax.conv_general_dilated(x, wq, (1, 1), "SAME")
+            b = lax.conv_general_dilated(x, wk, (1, 1), "SAME")
+            return a.reshape(4, -1) @ b.reshape(-1, 4)
+
+        with pytest.raises(TraceError, match="two traced activations"):
+            ir.from_jax(attn, (jnp.zeros((1, 3, 8, 8)),
+                               jnp.zeros((4, 3, 1, 1)),
+                               jnp.zeros((4, 3, 1, 1))))
+
+    def test_trace_nhwc_global_pool_and_concat(self):
+        import jax.numpy as jnp
+        from jax import lax
+        from repro.ir.trace import TraceError
+        dn = ("NHWC", "HWIO", "NHWC")
+
+        def f(x, w1, w2):
+            a = lax.conv_general_dilated(x, w1, (1, 1), "SAME",
+                                         dimension_numbers=dn)
+            b = lax.conv_general_dilated(x, w2, (1, 1), "SAME",
+                                         dimension_numbers=dn)
+            y = lax.concatenate([a, b], dimension=3)   # NHWC feature dim
+            return jnp.mean(y, axis=(1, 2))            # NHWC global pool
+
+        args = (jnp.zeros((1, 8, 8, 3)), jnp.zeros((3, 3, 3, 4)),
+                jnp.zeros((3, 3, 3, 4)))
+        gir = ir.from_jax(f, args, name="nhwc_cat")
+        kinds = [n["kind"] for n in gir.nodes]
+        assert kinds == ["input", "conv", "conv", "concat", "global_pool"]
+        cat = gir.nodes[3]
+        assert (cat["c"], cat["m"]) == (8, 8)          # 4 + 4 channels
+        gp = gir.nodes[4]
+        assert (gp["c"], gp["h"], gp["w"]) == (8, 8, 8)
+
+        def g(x, w1, w2):
+            a = lax.conv_general_dilated(x, w1, (1, 1), "SAME",
+                                         dimension_numbers=dn)
+            b = lax.conv_general_dilated(x, w2, (1, 1), "SAME",
+                                         dimension_numbers=dn)
+            return lax.concatenate([a, b], dimension=1)  # spatial (H)!
+
+        with pytest.raises(TraceError, match="feature-dim"):
+            ir.from_jax(g, args)
+
+    def test_trace_same_padding_on_even_input_keeps_halo(self):
+        """'SAME' stride-2 on an even input lowers to (lo,hi)=(0,1);
+        the symmetric Layer.padding must keep the halo, not drop to 0 —
+        for convs and pools alike."""
+        import jax.numpy as jnp
+        from jax import lax
+
+        def f(x, w):
+            y = lax.conv_general_dilated(x, w, (2, 2), "SAME")
+            return lax.reduce_window(y, -jnp.inf, lax.max,
+                                     (1, 1, 3, 3), (1, 1, 2, 2), "SAME")
+
+        gir = ir.from_jax(f, (jnp.zeros((1, 3, 32, 32)),
+                              jnp.zeros((8, 3, 3, 3))))
+        conv, pool = gir.nodes[-2], gir.nodes[-1]
+        assert conv["padding"] == [1, 1]
+        assert (conv["p"], conv["q"]) == (16, 16)
+        assert pool["padding"] == [1, 1]
+        assert (pool["p"], pool["q"]) == (8, 8)
+
+    def test_trace_raw_nhwc_pool_promotes_correct_channels(self):
+        """Pooling an input that never went through a conv must promote
+        it with the layout the window implies, not assume NCHW."""
+        import jax.numpy as jnp
+        from jax import lax
+
+        def f(x):
+            return lax.reduce_window(x, -jnp.inf, lax.max,
+                                     (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+        gir = ir.from_jax(f, (jnp.zeros((1, 32, 32, 8)),), name="rawpool")
+        inp, pool = gir.nodes
+        assert (inp["m"], inp["p"], inp["q"]) == (8, 32, 32)
+        assert (pool["c"], pool["h"], pool["w"]) == (8, 32, 32)
+        assert (pool["m"], pool["p"], pool["q"]) == (8, 16, 16)
+
+    def test_trace_rejects_partial_spatial_reduction(self):
+        import jax.numpy as jnp
+        from jax import lax
+        from repro.ir.trace import TraceError
+
+        def f(x, w):
+            y = lax.conv_general_dilated(x, w, (1, 1), "SAME")
+            return jnp.sum(y, axis=2)                  # H only: no Layer
+
+        with pytest.raises(TraceError, match="part of the spatial"):
+            ir.from_jax(f, (jnp.zeros((1, 3, 8, 8)),
+                            jnp.zeros((4, 3, 3, 3))))
+
+    def test_trace_rejects_unsupported_primitive(self):
+        import jax.numpy as jnp
+        from repro.ir.trace import TraceError
+
+        def weird(x):
+            return jnp.sort(x, axis=-1)
+
+        with pytest.raises(TraceError, match="sort"):
+            ir.from_jax(weird, (jnp.zeros((1, 4, 8, 8)),))
+
+    def test_trace_rejects_batched_input(self):
+        import jax.numpy as jnp
+        from jax import lax
+        from repro.ir.trace import TraceError
+
+        def cnn(x, w):
+            return lax.conv_general_dilated(x, w, (1, 1), "SAME")
+
+        with pytest.raises(TraceError, match="batch"):
+            ir.from_jax(cnn, (jnp.zeros((4, 3, 8, 8)),
+                              jnp.zeros((8, 3, 3, 3))))
+
+    def test_traced_graph_round_trips_through_file(self, tmp_path):
+        fn, args = self._tiny()
+        gir = ir.from_jax(fn, args, name="tiny")
+        path = tmp_path / "tiny.json"
+        ir.save(gir, str(path))
+        again = ir.load(str(path))
+        assert again.fingerprint() == gir.fingerprint()
+        assert build_workload(f"file:{path}").compiled().edge_pairs \
+            == gir.build().compiled().edge_pairs
