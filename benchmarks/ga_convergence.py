@@ -40,7 +40,8 @@ def run(full: bool = False):
          f"unique_states={res.evaluations};"
          f"group_cache={stats['unique_groups']};"
          f"group_hit_rate={stats['group_hit_rate']:.4f};"
-         f"delta_hit_rate={stats['delta_hit_rate']:.4f}")
+         f"batch_evals_per_sec={stats['batch_evals_per_sec']:.0f};"
+         f"pop_backend={stats['pop_backend']}")
     record("ga_convergence",
            workload=spec.workload, accelerator=spec.accelerator,
            generations=spec.backend_config["generations"], seed=spec.seed,
@@ -51,7 +52,8 @@ def run(full: bool = False):
            best_fitness=res.best_fitness,
            group_cache_entries=stats["unique_groups"],
            group_hit_rate=round(stats["group_hit_rate"], 6),
-           delta_hit_rate=round(stats["delta_hit_rate"], 6))
+           batch_evals_per_sec=round(stats["batch_evals_per_sec"], 1),
+           pop_backend=stats["pop_backend"])
 
 
 if __name__ == "__main__":

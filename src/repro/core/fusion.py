@@ -62,7 +62,7 @@ class FusionState:
     """Immutable fusion genome over ``graph`` (bitmask representation)."""
 
     __slots__ = ("graph", "cg", "mask", "_fused", "_gmasks", "_mgroups",
-                 "_gof", "_sched", "_cond", "_delta", "_groups_str")
+                 "_gof", "_sched", "_cond", "_groups_str")
 
     def __init__(self, graph: LayerGraph, fused: FrozenSet[Edge] = frozenset()):
         cg = graph.compiled()
@@ -90,9 +90,6 @@ class FusionState:
         self._gof: Optional[List[int]] = gof           # node id -> group index
         self._sched: Optional[bool] = sched
         self._cond: Optional[List[List[int]]] = cond   # condensation adjacency
-        # lineage hint for delta fitness: (parent genome mask,
-        # removed multi-group masks, added multi-group masks)
-        self._delta: Optional[tuple] = None
         self._groups_str: Optional[List[FrozenSet[str]]] = None
 
     @classmethod
@@ -168,7 +165,6 @@ class FusionState:
             child = FusionState._make(self.graph, cg, mask, self._gmasks,
                                       self._mgroups, gof, self._sched,
                                       self._cond)
-            child._delta = (self.mask, (), ())
             return child
         sched = None
         if self._sched is True:
@@ -187,11 +183,8 @@ class FusionState:
         # eager gof remap: cheaper than a lazy rebuild because nearly every
         # offspring ends up re-mutated as a pool member within a generation
         new_gof = [a if g == b else (g - 1 if g > b else g) for g in gof]
-        child = FusionState._make(self.graph, cg, mask, new_gmasks, new_mg,
-                                  new_gof, sched, None)
-        child._delta = (self.mask,
-                        tuple(m for m in (ma, mb) if m & (m - 1)), (merged,))
-        return child
+        return FusionState._make(self.graph, cg, mask, new_gmasks, new_mg,
+                                   new_gof, sched, None)
 
     def _separate_idx(self, i: int) -> "FusionState":
         bit = 1 << i
@@ -207,7 +200,6 @@ class FusionState:
             child = FusionState._make(self.graph, cg, mask, self._gmasks,
                                       self._mgroups, self._gof, self._sched,
                                       self._cond)
-            child._delta = (self.mask, (), ())
             return child
         self._ensure_gof()
         gi = self._gof[u]
@@ -257,11 +249,8 @@ class FusionState:
             lsb = mv & -mv
             new_gof[lsb.bit_length() - 1] = pos
             mv ^= lsb
-        child = FusionState._make(self.graph, cg, mask, new_gmasks, new_mg,
-                                  new_gof, sched, None)
-        child._delta = (self.mask, (comp,),
-                        tuple(p for p in (keep, moved) if p & (p - 1)))
-        return child
+        return FusionState._make(self.graph, cg, mask, new_gmasks, new_mg,
+                                   new_gof, sched, None)
 
     # ---- incremental machinery -------------------------------------------------
     def _fused_component(self, mask: int, start: int) -> int:

@@ -36,8 +36,12 @@ import random
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 
+from operator import itemgetter
+
 from repro.core.graph import LayerGraph
 from repro.core.problem import FusionProblem, SearchProblem
+
+_first = itemgetter(0)
 
 
 @dataclass(frozen=True)
@@ -111,7 +115,9 @@ def select_pool(entries: Sequence[Tuple[float, object]], top_n: int,
     """
     seen = set()
     unique: List[Tuple[float, object]] = []
-    for f, s in sorted(entries, key=lambda fs: -fs[0]):
+    # stable descending sort == ascending sort on the negated key, so ties
+    # keep their original order either way
+    for f, s in sorted(entries, key=_first, reverse=True):
         k = key(s)
         if k in seen:
             continue
@@ -137,23 +143,31 @@ def run_ga_problem(problem: SearchProblem, config: GAConfig = GAConfig(),
     bit-for-bit that of earlier revisions.
     """
     rng = random.Random(config.seed)
+    # bound locals for the per-offspring hot path; getrandbits drives an
+    # inlined _randbelow identical to CPython's (same draws as rng.randrange)
+    getrandbits = rng.getrandbits
+    pkey = problem.key
+    pmut = problem.mutate
+    pbatch_unique = getattr(problem, "fitness_batch_unique", None)
     fit_cache: Dict[Hashable, float] = {}
     offspring_evaluated = 0
 
     def score(states: List) -> List[float]:
         """Fitness per genome, via the run-level cache; novel genomes are
-        scored in one batch so the evaluator can dedupe shared structure."""
+        scored in one batch so the evaluator can dedupe shared structure.
+        The fresh list is unique by construction, so problems exposing
+        ``fitness_batch_unique`` skip their own dedup pass."""
+        keys = [pkey(s) for s in states]
         fresh: Dict[Hashable, object] = {}
-        for s in states:
-            k = problem.key(s)
+        for k, s in zip(keys, states):
             if k not in fit_cache and k not in fresh:
                 fresh[k] = s
         if fresh:
-            todo = list(fresh.values())
-            fits = problem.fitness_batch(todo)
-            for s, f in zip(todo, fits):
-                fit_cache[problem.key(s)] = f
-        return [fit_cache[problem.key(s)] for s in states]
+            vals = list(fresh.values())
+            fits = (pbatch_unique(vals) if pbatch_unique is not None
+                    else problem.fitness_batch(vals))
+            fit_cache.update(zip(fresh, fits))
+        return [fit_cache[k] for k in keys]
 
     init = problem.initial()
     pool: List[Tuple[float, object]] = list(zip(score([init]), [init]))
@@ -161,13 +175,18 @@ def run_ga_problem(problem: SearchProblem, config: GAConfig = GAConfig(),
 
     for gen in range(config.generations):
         offspring: List = []
+        npool = len(pool)
+        kbits = npool.bit_length()
         for _ in range(config.mutations_per_gen):
-            parent = pool[rng.randrange(len(pool))][1]
+            r = getrandbits(kbits)
+            while r >= npool:
+                r = getrandbits(kbits)
+            parent = pool[r][1]
             if config.crossover_rate and rng.random() < config.crossover_rate \
                     and len(pool) > 1:
                 other = pool[rng.randrange(len(pool))][1]
                 parent = problem.crossover(parent, other, rng)
-            offspring.append(problem.mutate(parent, rng))
+            offspring.append(pmut(parent, rng))
         fits = score(offspring)
         offspring_evaluated += len(offspring)
 
@@ -181,10 +200,16 @@ def run_ga_problem(problem: SearchProblem, config: GAConfig = GAConfig(),
         if len(pool) < config.population:
             need = config.population - len(pool)
             n_surv = len(pool)
+            sbits = n_surv.bit_length()
             topup = []
             for _ in range(need):
-                i, j = rng.randrange(n_surv), rng.randrange(n_surv)
-                topup.append(problem.mutate(pool[min(i, j)][1], rng))
+                i = getrandbits(sbits)
+                while i >= n_surv:
+                    i = getrandbits(sbits)
+                j = getrandbits(sbits)
+                while j >= n_surv:
+                    j = getrandbits(sbits)
+                topup.append(pmut(pool[i if i < j else j][1], rng))
             tfits = score(topup)
             offspring_evaluated += len(topup)
             pool.extend(zip(tfits, topup))

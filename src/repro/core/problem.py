@@ -98,13 +98,44 @@ class FusionProblem(SearchProblem):
         self.evaluator = evaluator
         self.objective = objective
         self.cg = graph.compiled()
+        self._mbits = self.cg.m.bit_length()
         self._batch = getattr(evaluator, "fitness_batch", None)
+        self._batch_unique = getattr(evaluator, "fitness_batch_unique", None)
 
     def initial(self) -> FusionState:
         return FusionState.layerwise(self.graph)
 
     def mutate(self, genome: FusionState, rng: random.Random) -> FusionState:
-        return genome.mutate(rng)
+        """One random edge flip.  Returns a *lazy* child (mask only — no
+        group maintenance): the batched population engine recomputes all
+        per-genome structure array-natively, so eagerly maintaining union-find
+        state per offspring (what ``FusionState.mutate`` does when the parent
+        is structured) would be pure overhead.  The inlined getrandbits loop
+        is CPython's ``_randbelow`` — the same draws ``rng.randrange(m)``
+        makes, so fixed-seed runs are unchanged."""
+        m = self.cg.m
+        if not m:
+            raise ValueError("graph has no edges to mutate")
+        grb = rng.getrandbits
+        i = grb(self._mbits)
+        while i >= m:
+            i = grb(self._mbits)
+        return FusionState._make(self.graph, genome.cg,
+                                 genome.mask ^ (1 << i))
+
+    def prewarm(self) -> None:
+        """Materialize everything forked workers should inherit read-only
+        via copy-on-write: the compiled graph, the layerwise baseline, and
+        the population engine's static tables (``repro.search.island`` calls
+        this before spawning)."""
+        ev = self.evaluator
+        if hasattr(ev, "population"):
+            try:
+                ev.population()
+            except RuntimeError:     # no numpy: scalar path needs no tables
+                ev.layerwise()
+        elif hasattr(ev, "layerwise"):
+            ev.layerwise()
 
     def fitness(self, genome: FusionState) -> float:
         return self.evaluator.fitness(genome, self.objective)
@@ -114,8 +145,20 @@ class FusionProblem(SearchProblem):
             return self._batch(genomes, self.objective)
         return [self.fitness(g) for g in genomes]
 
+    def fitness_batch_unique(self, genomes: Sequence[FusionState]
+                             ) -> List[float]:
+        """Batch scoring for genome lists already deduped by :meth:`key`
+        (the GA loop's per-run cache guarantees this); skips the
+        evaluator's own dedup pass.  Subclasses that override
+        :meth:`fitness_batch` keep their scoring path: the fast lane only
+        engages when batch scoring is the stock evaluator route."""
+        if (self._batch_unique is not None
+                and type(self).fitness_batch is FusionProblem.fitness_batch):
+            return self._batch_unique(genomes, self.objective)
+        return self.fitness_batch(genomes)
+
     def key(self, genome: FusionState) -> int:
-        return genome.key()
+        return genome.mask               # == genome.key(), one hop cheaper
 
     def crossover(self, a: FusionState, b: FusionState,
                   rng: random.Random) -> FusionState:

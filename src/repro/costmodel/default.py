@@ -53,6 +53,26 @@ class DefaultCostModel(CostModel):
             return self._cost_group_mask(key)
         return self._cost_group_members(key)
 
+    def _map_layer_memo(self, i: int, inputs_off: bool, outputs_off: bool,
+                        weight_passes: int) -> LayerCost:
+        """Per-(layer, boundary flags, weight passes) mapper memo.  A layer's
+        mapping depends only on these; across the thousands of groups a
+        search costs, the same few hundred combinations recur.  Cached
+        :class:`LayerCost` objects are returned as-is — callers only read
+        them (``LayerCost.__iadd__`` mutates the accumulator, not its
+        operand)."""
+        memo = self.__dict__.get("_layer_memo")
+        if memo is None:
+            memo = self._layer_memo = {}
+        k = (i, inputs_off, outputs_off, weight_passes)
+        lc = memo.get(k)
+        if lc is None:
+            lc = memo[k] = map_layer(self.cg.layers[i], self.acc, self.em,
+                                     inputs_offchip=inputs_off,
+                                     outputs_offchip=outputs_off,
+                                     weight_stream_passes=weight_passes)
+        return lc
+
     # ---- internals --------------------------------------------------------------
     def _cost_group_mask(self, gmask: int) -> Optional[CostBreakdown]:
         """Fast path: members given as a node bitmask, order and membership
@@ -85,10 +105,8 @@ class DefaultCostModel(CostModel):
             succs = cg.succ_ids[i]
             outputs_off = (not succs) or \
                 any(not (gmask >> v) & 1 for v in succs)
-            lc = map_layer(cg.layers[i], self.acc, self.em,
-                           inputs_offchip=inputs_off,
-                           outputs_offchip=outputs_off,
-                           weight_stream_passes=weight_passes if multi else 1)
+            lc = self._map_layer_memo(i, inputs_off, outputs_off,
+                                      weight_passes if multi else 1)
             total += lc
             compute_cycles += lc.compute_cycles
             dram_cycles += lc.dram_cycles

@@ -16,14 +16,21 @@ Group costing (multi-member groups):
   3. member layers are costed with intra-group edges kept on-chip; compute
      and DRAM time overlap within the group.
 
-Hot-path notes (incremental engine): for bitmask genomes the group cache is
+Hot-path notes (batched engine): for bitmask genomes the group cache is
 keyed by the group's **member node-bitmask** (a Python int — one machine-word
 hash instead of a frozenset of strings), member topological order comes from
 integer adjacency, and :meth:`Evaluator.fitness_batch` dedupes an entire
 offspring generation against the cache before costing only novel groups.
-Reference states (``repro.core.fusion_ref``) take the original frozenset-keyed
-path; both paths run the same float operations in the same order, so costs
-agree bit-for-bit (pinned by ``tests/test_fusion_equivalence.py``).
+Batches are scored by the array-native
+:class:`repro.core.population.PopulationEvaluator` (one ``(P, n_edges)``
+matrix per generation; see that module's docstring); the per-state
+:meth:`Evaluator._fitness_fast` path remains as the small-batch/no-numpy
+fallback and the bit-identity reference — both sum ``base + corrections`` in
+ascending group-min-member order, so they agree bit-for-bit (pinned by
+``tests/test_population_engine.py``).  Reference states
+(``repro.core.fusion_ref``) take the original frozenset-keyed path; both
+paths run the same float operations in the same order, so costs agree
+bit-for-bit (pinned by ``tests/test_fusion_equivalence.py``).
 
 Cost-backend note: the evaluator owns *memoization and fitness*, not the
 numbers — those come from a pluggable :class:`repro.costmodel.base.CostModel`
@@ -45,6 +52,14 @@ from repro.costmodel.base import (CostBreakdown, CostModel, GroupKey,
                                   GroupTotals)
 from repro.costmodel.default import DefaultCostModel
 from repro.costmodel.energy import DEFAULT_ENERGY, EnergyModel
+
+try:                                     # numpy-backed population engine
+    from repro.core.population import (MIN_BATCH, PopulationEvaluator,
+                                       engine_mode)
+    _HAVE_POP = True
+except ImportError:                      # pragma: no cover - no numpy
+    _HAVE_POP = False
+    MIN_BATCH = 1 << 62
 
 _MISSING = object()
 
@@ -146,18 +161,16 @@ class Evaluator:
         # multi-member group mask -> cost delta vs its members' singleton
         # costs (the fast fitness path sums base + these corrections)
         self._corr: Dict[int, GroupCost] = {}
-        # genome mask -> scalar cost sums (None = invalid/unschedulable);
-        # lets offspring apply only their mutation's group delta
-        self._sums: Dict[int, Optional[tuple]] = {}
         # layerwise scalar sums + per-objective baseline metrics (lazy)
         self._base: Optional[tuple] = None
         self.evals = 0
         self.group_hits = 0          # group-cost lookups served from cache
         self.group_misses = 0        # novel groups actually costed
-        self.sums_hits = 0           # states served via parent-delta sums
         self.batch_states = 0        # states seen by fitness_batch
         self.batch_unique = 0        # ... of which had a novel genome
         self._layerwise: Optional[ScheduleCost] = None
+        self._pop: Optional["PopulationEvaluator"] = None
+        self._pop_mode = engine_mode() if _HAVE_POP else "off"
 
     # ---- public API ----------------------------------------------------------------
     def layerwise(self) -> ScheduleCost:
@@ -189,116 +202,111 @@ class Evaluator:
                       objective: str = "edp") -> List[float]:
         """Fitness for a whole offspring generation (GA hot path).
 
-        Dedupes the generation by genome against the mask-keyed caches before
-        costing, so duplicate offspring and shared groups never re-enter the
-        cost model; per-state cost is assembled as the layerwise baseline plus
-        cached corrections from multi-member groups only (singleton groups —
-        the vast majority — contribute exactly their baseline cost, so they
-        are skipped).  Values may differ from :meth:`fitness` by float
-        re-association only (~1 ulp); selection order is unaffected in
-        practice and ``run_ga`` re-scores its final winner exactly.
+        Dedupes the generation by genome against the mask-keyed caches, then
+        scores the novel genomes through the array-native population engine
+        (:meth:`population`) — one ``(P, n_edges)`` matrix per call — falling
+        back to the per-state :meth:`_fitness_fast` path for small batches,
+        non-native objectives, or ``REPRO_POP_ENGINE=off``.  Both paths sum
+        ``base + corrections`` in ascending group-min-member order, so their
+        results are bit-for-bit identical; values may differ from
+        :meth:`fitness` by float re-association only (~1 ulp), and ``run_ga``
+        re-scores its final winner exactly.
         """
         self.batch_states += len(states)
+        keys = [s.key() for s in states]
         uniq: Dict[int, float] = {}
-        out: List[float] = []
-        for s in states:
-            k = s.key()
-            f = uniq.get(k)
-            if f is None:
-                f = self._fitness_fast(s, objective)
-                uniq[k] = f
-            out.append(f)
+        todo: List[FusionState] = []
+        for s, k in zip(states, keys):
+            if k not in uniq:
+                uniq[k] = 0.0
+                todo.append(s)
         self.batch_unique += len(uniq)
-        return out
+        if (self._pop_mode != "off" and len(todo) >= MIN_BATCH
+                and objective in NATIVE_OBJECTIVES
+                and todo[0].cg is self.cg):
+            fits = self.population().fitness_masks(
+                [s.mask for s in todo], objective)
+            for s, f in zip(todo, fits.tolist()):
+                uniq[s.mask] = f
+        else:
+            for s in todo:
+                uniq[s.key()] = self._fitness_fast(s, objective)
+        return [uniq[k] for k in keys]
 
-    def _fitness_fast(self, state: FusionState, objective: str) -> float:
-        """Baseline-plus-corrections fitness for bitmask states.
+    def fitness_batch_unique(self, states: Sequence[FusionState],
+                             objective: str = "edp") -> List[float]:
+        """:meth:`fitness_batch` for callers that already deduped ``states``
+        by genome (the GA loop's run-level cache does) — skips the per-state
+        re-keying pass and returns fitness in input order.  Same engine
+        routing, bit-identical results."""
+        self.batch_states += len(states)
+        self.batch_unique += len(states)
+        if (self._pop_mode != "off" and len(states) >= MIN_BATCH
+                and objective in NATIVE_OBJECTIVES
+                and states[0].cg is self.cg):
+            return self.population().fitness_masks(
+                [s.mask for s in states], objective).tolist()
+        return [self._fitness_fast(s, objective) for s in states]
 
-        When the state carries a mutation delta and its parent's cost sums
-        are cached, only the removed/added groups are (un)applied — O(1) per
-        offspring; otherwise the sums are rebuilt from the layerwise baseline
-        plus every multi-member group's cached correction.
-        """
-        sched = state._sched                 # inlined is_schedulable (hot path)
-        if sched is None:
-            sched = state.is_schedulable()
-        if not sched:
-            self._sums[state.mask] = None
-            return 0.0
+    def population(self, backend: Optional[str] = None
+                   ) -> "PopulationEvaluator":
+        """The batched population engine bound to this evaluator (lazy;
+        shares the group-correction caches).  Building it up front — e.g.
+        before forking island workers — lets every worker inherit the static
+        graph tables and the layerwise baseline via copy-on-write."""
+        if not _HAVE_POP:
+            raise RuntimeError("population engine requires numpy")
+        if self._pop is None:
+            self._ensure_base()
+            self._pop = PopulationEvaluator(self, backend)
+        return self._pop
+
+    def _ensure_base(self) -> tuple:
+        """Layerwise scalar sums + per-objective baseline metrics (lazy)."""
         if self._base is None:
             lw = self.layerwise()
             self._base = (lw.energy_pj, lw.cycles, lw.dram_read_words,
                           lw.dram_write_words, lw.act_write_events, lw.macs,
-                          {obj: lw.metric(obj)
-                           for obj in ("edp", "energy", "cycles", "dram")})
+                          {obj: lw.metric(obj) for obj in NATIVE_OBJECTIVES})
+        return self._base
+
+    def _fitness_fast(self, state: FusionState, objective: str) -> float:
+        """Baseline-plus-corrections fitness for bitmask states — the
+        canonical scalar path: corrections are applied in ascending order of
+        each group's minimum member, which is exactly the summation order the
+        batched engine reproduces (``tests/test_population_engine.py`` pins
+        the bit-identity)."""
+        sched = state._sched                 # inlined is_schedulable (hot path)
+        if sched is None:
+            sched = state.is_schedulable()
+        if not sched:
+            return 0.0
+        base = self._ensure_base()
         corr = self._corr
         corr_get = corr.get
         hits = 0
-        sums = None
-        delta = state._delta
-        if delta is not None:
-            psums = self._sums.get(delta[0])
-            if psums is not None:            # parent scored and valid
-                e, c, dr, dw, aw, mc = psums
-                ok = True
-                for gm in delta[1]:          # groups dissolved by the mutation
-                    d = corr_get(gm, _MISSING)
-                    if d is _MISSING or d is None:
-                        ok = False           # defensive: rebuild from scratch
-                        break
-                    hits += 1
-                    e -= d[0]
-                    c -= d[1]
-                    dr -= d[2]
-                    dw -= d[3]
-                    aw -= d[4]
-                    mc -= d[5]
-                if ok:
-                    self.sums_hits += 1
-                    for gm in delta[2]:      # groups created by the mutation
-                        d = corr_get(gm, _MISSING)
-                        if d is _MISSING:
-                            d = self._compute_correction(gm)
-                            corr[gm] = d
-                        else:
-                            hits += 1
-                        if d is None:        # over-capacity group: invalid
-                            self.group_hits += hits
-                            self._sums[state.mask] = None
-                            return 0.0
-                        e += d[0]
-                        c += d[1]
-                        dr += d[2]
-                        dw += d[3]
-                        aw += d[4]
-                        mc += d[5]
-                    sums = (e, c, dr, dw, aw, mc)
-        if sums is None:                     # no usable lineage: full rebuild
-            e, c, dr, dw, aw, mc = self._base[:6]
-            mgroups = state._mgroups         # inlined multi_masks (hot path)
-            if mgroups is None:
-                mgroups = state.multi_masks()
-            for gm in mgroups:               # singletons cost their baseline
-                d = corr_get(gm, _MISSING)
-                if d is _MISSING:
-                    d = self._compute_correction(gm)
-                    corr[gm] = d
-                else:
-                    hits += 1
-                if d is None:
-                    self.group_hits += hits
-                    self._sums[state.mask] = None
-                    return 0.0               # over-capacity group: invalid
-                e += d[0]
-                c += d[1]
-                dr += d[2]
-                dw += d[3]
-                aw += d[4]
-                mc += d[5]
-            sums = (e, c, dr, dw, aw, mc)
+        e, c, dr, dw, aw, mc = base[:6]
+        mgroups = state._mgroups             # inlined multi_masks (hot path)
+        if mgroups is None:
+            mgroups = state.multi_masks()
+        # canonical order: ascending minimum member (= lowest set bit)
+        for gm in sorted(mgroups, key=lambda m: m & -m):
+            d = corr_get(gm, _MISSING)
+            if d is _MISSING:
+                d = self._compute_correction(gm)
+                corr[gm] = d
+            else:
+                hits += 1
+            if d is None:
+                self.group_hits += hits
+                return 0.0                   # over-capacity group: invalid
+            e += d[0]
+            c += d[1]
+            dr += d[2]
+            dw += d[3]
+            aw += d[4]
+            mc += d[5]
         self.group_hits += hits
-        self._sums[state.mask] = sums
-        e, c, dr, dw = sums[0], sums[1], sums[2], sums[3]
         if objective == "edp":
             new = e * c
         elif objective == "energy":
@@ -307,7 +315,7 @@ class Evaluator:
             new = c
         else:
             new = float(dr + dw)
-        return self._base[6][objective] / new if new > 0 else 0.0
+        return base[6][objective] / new if new > 0 else 0.0
 
     def _compute_correction(self, gmask: int) -> GroupCost:
         """Cost delta of fusing ``gmask``'s members vs leaving each layerwise."""
@@ -351,23 +359,31 @@ class Evaluator:
 
     def cache_stats(self) -> Dict[str, float]:
         """Cache-effectiveness counters.  ``group_hit_rate`` covers explicit
-        group-cost lookups only; on the GA hot path most states are served by
-        the parent-delta sums instead (no group lookups at all), which
-        ``delta_hit_rate`` reports — that is the headline number for batch
-        evaluation effectiveness."""
+        group-cost lookups only; ``batch_evals_per_sec`` is the headline
+        throughput of the array-native population engine (states scored per
+        second of in-engine time; 0.0 when every batch took the scalar
+        fallback)."""
         touches = self.group_hits + self.group_misses
-        return {
+        stats = {
             "unique_groups": len(self._group_cache),
             "group_hits": self.group_hits,
             "group_misses": self.group_misses,
             "group_hit_rate": self.group_hits / touches if touches else 0.0,
-            "sums_hits": self.sums_hits,
-            "delta_hit_rate": (self.sums_hits / self.batch_unique
-                               if self.batch_unique else 0.0),
             "states_evaluated": self.evals,
             "batch_states": self.batch_states,
             "batch_unique": self.batch_unique,
+            "pop_backend": "off",
+            "pop_batches": 0,
+            "batch_time_s": 0.0,
+            "batch_evals_per_sec": 0.0,
         }
+        if self._pop is not None:
+            ps = self._pop.stats()
+            stats.update(
+                pop_backend=ps["backend"], pop_batches=ps["batches"],
+                batch_time_s=ps["batch_time_s"],
+                batch_evals_per_sec=ps["batch_evals_per_sec"])
+        return stats
 
     # ---- internals ------------------------------------------------------------------
     def _evaluate_keys(self, keys: Sequence[GroupKey]

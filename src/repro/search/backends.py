@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import itertools
 import random
+import time
 from typing import Callable, List, Optional
 
 from repro.core.ga import GAConfig, GAResult, run_ga_problem
@@ -46,6 +47,48 @@ EXHAUSTIVE_LIMIT = 1 << 16
 
 #: batch size for backends that score genomes through ``fitness_batch``
 _CHUNK = 128
+
+#: batch size when the problem advertises an array-native batched evaluator
+#: (amortizing per-batch engine overhead matters more than history
+#: granularity for full enumerations)
+_CHUNK_BATCHED = 1024
+
+
+def _batch_chunk(problem: SearchProblem) -> int:
+    """Chunk size for ``fitness_batch`` loops: bigger when the problem's
+    evaluator batches through the array-native population engine."""
+    ev = getattr(problem, "evaluator", None)
+    if getattr(ev, "_pop_mode", "off") != "off":
+        return _CHUNK_BATCHED
+    return _CHUNK
+
+
+def _estimate_runtime_s(problem: SearchProblem, size: int,
+                        probe: int = 256) -> Optional[float]:
+    """Rough full-enumeration runtime from one timed probe batch of random
+    genomes; None when the problem cannot sample or scoring fails."""
+    sampler = getattr(problem, "random_genome", None)
+    if sampler is None:
+        return None
+    try:
+        rng = random.Random(0)
+        states = [sampler(rng) for _ in range(min(probe, size))]
+        t0 = time.perf_counter()
+        problem.fitness_batch(states)
+        dt = time.perf_counter() - t0
+    except Exception:
+        return None
+    if dt <= 0 or not states:
+        return None
+    return size * dt / len(states)
+
+
+def _fmt_eta(seconds: float) -> str:
+    if seconds < 120:
+        return f"{seconds:.1f}s"
+    if seconds < 7200:
+        return f"{seconds / 60:.1f}min"
+    return f"{seconds / 3600:.1f}h"
 
 
 class BackendError(ValueError):
@@ -240,19 +283,23 @@ class ExhaustiveBackend(SearchBackend):
             raise BackendError(
                 f"problem {problem.name!r} is not enumerable")
         if size > limit:
+            est = _estimate_runtime_s(problem, size)
+            eta = (f" (estimated batched runtime for all {size} states: "
+                   f"~{_fmt_eta(est)})" if est is not None else "")
             raise BackendError(
                 f"space of {size} genomes exceeds the exhaustive limit "
                 f"{limit}; pass limit={size} explicitly (API: "
                 f"backend_config={{\"limit\": {size}}}; CLI: "
                 f"--backend-config '{{\"limit\": {size}}}') if enumerating "
-                f"{size} states is affordable, or use ga / hill_climb / "
-                f"random instead")
+                f"{size} states is affordable{eta}, or use ga / hill_climb "
+                f"/ random instead")
         best, best_f = None, -1.0
         history: List[float] = []
         done, step = 0, 0
+        chunk_n = _batch_chunk(problem)
         genomes = iter(problem.enumerate())
         while True:
-            chunk = list(itertools.islice(genomes, _CHUNK))
+            chunk = list(itertools.islice(genomes, chunk_n))
             if not chunk:
                 break
             fits = problem.fitness_batch(chunk)

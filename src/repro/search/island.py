@@ -139,10 +139,12 @@ def _sync_gens(generations: int, migrate_every: int) -> List[int]:
 
 
 def _island_worker(problem: SearchProblem, config: GAConfig,
-                   sync_gens: List[int], migrants: int, chan: _Chan) -> None:
+                   sync_gens: List[int], migration_gens: List[int],
+                   migrants: int, chan: _Chan) -> None:
     """One island: run the full GA, pausing at each sync generation to trade
     elites through the parent; ends with a ("done", ...) result message."""
     sync_set = set(sync_gens)
+    migration_set = set(migration_gens)
     stop = [False]
 
     stats = [0.0, 0, 0]                  # best / evals / offspring so far
@@ -150,11 +152,18 @@ def _island_worker(problem: SearchProblem, config: GAConfig,
     def migrate(gen, pool):
         if gen not in sync_set:
             return None
-        elite = sorted(pool, key=lambda fs: -fs[0])[:migrants]
+        # elites ride the sync message only when this barrier actually
+        # migrates; observation-only barriers ship stats alone (the parent
+        # would discard the elites anyway, so payloads stay minimal and
+        # results are unchanged)
+        if gen in migration_set:
+            elite = sorted(pool, key=lambda fs: -fs[0])[:migrants]
+            payload = [(f, problem.encode_genome(g)) for f, g in elite]
+        else:
+            payload = []
         # best is current; evals/offspring lag one generation (the observer
         # updates them after migration) — budget checks are coarse anyway
-        chan.send(("sync", gen,
-                   [(f, problem.encode_genome(g)) for f, g in elite],
+        chan.send(("sync", gen, payload,
                    (max(f for f, _ in pool), stats[1], stats[2])))
         cmd, immigrants = chan.recv()
         if cmd == "stop":
@@ -240,9 +249,17 @@ class IslandBackend(SearchBackend):
             # fixed-seed results are bit-identical (no migration machinery)
             return run_ga_problem(problem, configs[0], observer)
         sync_gens = _sync_gens(configs[0].generations, migrate_every)
+        migration_gens = [g for g in sync_gens
+                          if (g + 1) % migrate_every == 0]
         ctx = _fork_context() if workers == "process" else None
+        # build every read-only shared structure BEFORE forking so workers
+        # inherit the compiled graph, baseline costs, and population-engine
+        # tables copy-on-write instead of each rebuilding them
+        prewarm = getattr(problem, "prewarm", None)
+        if prewarm is not None:
+            prewarm()
         chans, workers_alive = self._spawn(problem, configs, sync_gens,
-                                           migrants, ctx)
+                                           migration_gens, migrants, ctx)
         try:
             return self._drive(problem, chans, sync_gens, migrate_every,
                                observer)
@@ -252,7 +269,7 @@ class IslandBackend(SearchBackend):
 
     # ---- parent side ------------------------------------------------------------
     @staticmethod
-    def _spawn(problem, configs, sync_gens, migrants, ctx):
+    def _spawn(problem, configs, sync_gens, migration_gens, migrants, ctx):
         chans: List[_Chan] = []
         alive = []
         for cfg in configs:
@@ -260,7 +277,8 @@ class IslandBackend(SearchBackend):
                 parent_conn, child_conn = ctx.Pipe(duplex=True)
                 chan_child = _Chan(conn=child_conn)
                 w = ctx.Process(target=_island_worker,
-                                args=(problem, cfg, sync_gens, migrants,
+                                args=(problem, cfg, sync_gens,
+                                      migration_gens, migrants,
                                       chan_child), daemon=True)
                 w.start()
                 child_conn.close()      # parent keeps only its end
@@ -271,7 +289,8 @@ class IslandBackend(SearchBackend):
             to_parent: queue.Queue = queue.Queue()
             chan_child = _Chan(inbox=to_child, outbox=to_parent)
             w = threading.Thread(target=_island_worker,
-                                 args=(problem, cfg, sync_gens, migrants,
+                                 args=(problem, cfg, sync_gens,
+                                       migration_gens, migrants,
                                        chan_child), daemon=True)
             chans.append(_Chan(inbox=to_parent, outbox=to_child))
             w.start()

@@ -56,6 +56,8 @@ class _CustomObjectiveProblem(FusionProblem):
     def fitness_batch(self, genomes):
         return [self.fitness(g) for g in genomes]
 
+    fitness_batch_unique = fitness_batch   # evaluator can't score this metric
+
 
 class SearchSession:
     """One search: spec -> (resolved objects) -> backend run -> artifact."""
