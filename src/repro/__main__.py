@@ -7,8 +7,10 @@ registries, export workload IR.
     repro submit --store schedules/ --workload mobilenet_v3 --backend island
     repro serve --store schedules/ --requests jobs.json --workers 4
     repro report artifact.json [--schedule] [--history]
+    repro verify artifact.json | repro verify --store schedules/
+    repro lint [paths...]
     repro export --workload mobilenet_v3@hw=160 --out model.json
-    repro list [--json]
+    repro list [--json] [--store schedules/]
 
 ``--workload`` accepts every spec form (``name``, ``name@key=value,...``,
 ``file:model.json``); see ``repro.search.registry``.
@@ -149,6 +151,36 @@ def _add_report_parser(sub) -> None:
                    help="emit the summary as JSON")
 
 
+def _add_verify_parser(sub) -> None:
+    p = sub.add_parser(
+        "verify", help="independently re-check artifacts: groups, "
+                       "schedulability, footprints, cost consistency, and "
+                       "the DRAM-traffic lower-bound certificate "
+                       "(repro.analysis)")
+    p.add_argument("artifacts", nargs="*", metavar="ARTIFACT",
+                   help="ScheduleArtifact JSON paths")
+    p.add_argument("--store", default=None, metavar="DIR",
+                   help="verify every object in an ArtifactStore (also "
+                        "checks each object's content address)")
+    p.add_argument("--json", action="store_true",
+                   help="emit per-artifact check results as JSON")
+
+
+def _add_lint_parser(sub) -> None:
+    p = sub.add_parser(
+        "lint", help="determinism lint over the engine packages "
+                     "(global RNG state, wall-clock reads, unordered "
+                     "iteration, mutable defaults)")
+    p.add_argument("paths", nargs="*", metavar="PATH",
+                   help="files/directories to lint (default: "
+                        "src/repro/{core,search,serve,costmodel,ir,hw})")
+    p.add_argument("--root", default=".",
+                   help="repo root holding pyproject.toml (allowlist) "
+                        "and src/ (default: .)")
+    p.add_argument("--json", action="store_true",
+                   help="emit findings as JSON")
+
+
 def _summary_line(artifact) -> str:
     s = artifact.summary()
     return (f"{s['workload']} on {s['accelerator']} [{s['backend']}, "
@@ -221,13 +253,20 @@ def _cmd_serve(args) -> int:
 
 
 def _cmd_report(args) -> int:
+    from repro.analysis import verify_artifact
     from repro.search import ScheduleArtifact
 
     artifact = ScheduleArtifact.load(args.artifact)
     for w in artifact.load_warnings:
         print(f"warning: {w}", file=sys.stderr)
     s = artifact.summary()
+    # independent re-verification + Chen-et-al lower-bound certificate
+    # (repro.analysis): static, no re-search
+    report = verify_artifact(artifact)
+    cert = report.certificate
     if args.json:
+        s["verified"] = report.ok
+        s["certificate"] = cert.to_dict() if cert else None
         print(json.dumps(s, indent=2, sort_keys=True))
     else:
         print(f"workload     : {s['workload']} "
@@ -246,6 +285,11 @@ def _cmd_report(args) -> int:
         print(f"genome       : {artifact.genome_mask:#x} "
               f"({len(artifact.fused_edges)}/{artifact.n_edges} edges fused)")
         print(f"fingerprint  : {artifact.graph_fingerprint}")
+        if cert is not None:
+            print(f"certificate  : {cert.describe()}")
+        verdict = "all checks passed" if report.ok else \
+            "FAILED " + ", ".join(c.name for c in report.failures())
+        print(f"verification : {verdict} (repro verify for detail)")
     if not args.json:
         from repro.core.report import breakdown_report
         print()
@@ -284,6 +328,60 @@ def _schedule_result(artifact):
         best_state=state, ga=ga)
 
 
+def _cmd_verify(args) -> int:
+    from repro.analysis import verify_artifact, verify_store
+    from repro.search import ScheduleArtifact
+
+    if not args.artifacts and not args.store:
+        print("error: pass artifact paths and/or --store DIR",
+              file=sys.stderr)
+        return 2
+    results = []                      # (label, load_warnings, report)
+    for path in args.artifacts:
+        artifact = ScheduleArtifact.load(path)
+        results.append((path, list(artifact.load_warnings),
+                        verify_artifact(artifact)))
+    if args.store:
+        for key, report in verify_store(args.store):
+            results.append((f"{args.store}:{key[:12]}", [], report))
+    all_ok = all(r.ok for _, _, r in results)
+    if args.json:
+        print(json.dumps({
+            "ok": all_ok,
+            "results": [dict(label=label, load_warnings=warns,
+                             **report.to_dict())
+                        for label, warns, report in results],
+        }, indent=2, sort_keys=True))
+        return 0 if all_ok else 1
+    for label, warns, report in results:
+        print(f"{label}: {'verified' if report.ok else 'FAILED'}")
+        for w in warns:
+            print(f"  warning: {w}", file=sys.stderr)
+        print(report.describe())
+    n_bad = sum(1 for _, _, r in results if not r.ok)
+    print(f"{len(results)} artifact(s): "
+          f"{len(results) - n_bad} verified, {n_bad} failed")
+    return 0 if all_ok else 1
+
+
+def _cmd_lint(args) -> int:
+    from repro.analysis import run_lint
+
+    findings = run_lint(args.root, paths=args.paths or None)
+    if args.json:
+        print(json.dumps([f.to_dict() for f in findings], indent=2,
+                         sort_keys=True))
+        return 1 if findings else 0
+    for f in findings:
+        print(f.describe())
+    if findings:
+        print(f"{len(findings)} determinism finding(s) — fix them or add "
+              f"justified [tool.repro.lint] allow entries")
+        return 1
+    print("determinism lint: clean")
+    return 0
+
+
 def _cmd_export(args) -> int:
     import repro.ir as ir
     from repro.search import build_workload
@@ -318,11 +416,51 @@ def _list_payload() -> dict:
     }
 
 
+def _list_store(root: str, as_json: bool) -> int:
+    """``repro list --store DIR``: browse a schedule store, surfacing each
+    object's load warnings (corrupt/legacy objects stay visible instead of
+    only erroring at report time)."""
+    from repro.serve import ArtifactStore, StoreError
+
+    store = ArtifactStore(root, create=False)
+    rows = []
+    for key in store.keys():
+        try:
+            artifact = store.load_key(key)
+        except StoreError as e:
+            rows.append({"key": key, "error": str(e)})
+            continue
+        if artifact is None:
+            continue
+        rows.append({"key": key, "summary": artifact.summary(),
+                     "load_warnings": list(artifact.load_warnings),
+                     "artifact": artifact})
+    if as_json:
+        print(json.dumps([{k: v for k, v in row.items() if k != "artifact"}
+                          for row in rows], indent=2, sort_keys=True))
+        return 0
+    for row in rows:
+        if "error" in row:
+            print(f"{row['key'][:12]}  UNREADABLE: {row['error']}")
+            continue
+        print(f"{row['key'][:12]}  {_summary_line(row['artifact'])}")
+        for w in row["load_warnings"]:
+            print(f"{'':12}  warning: {w}")
+    n_bad = sum(1 for r in rows if "error" in r)
+    n_warn = sum(1 for r in rows if r.get("load_warnings"))
+    print(f"{len(rows)} object(s) in {root}"
+          + (f" — {n_bad} unreadable" if n_bad else "")
+          + (f", {n_warn} with load warnings" if n_warn else ""))
+    return 0
+
+
 def _cmd_list(args) -> int:
     import inspect
 
     from repro.search import (ACCELERATORS, BACKENDS, COSTMODELS, OBJECTIVES,
                               WORKLOADS, workload_schemas)
+    if getattr(args, "store", None):
+        return _list_store(args.store, as_json=getattr(args, "json", False))
     if getattr(args, "json", False):
         print(json.dumps(_list_payload(), indent=2, sort_keys=True))
         return 0
@@ -357,20 +495,27 @@ def main(argv: Optional[List[str]] = None) -> int:
     _add_submit_parser(sub)
     _add_serve_parser(sub)
     _add_report_parser(sub)
+    _add_verify_parser(sub)
+    _add_lint_parser(sub)
     _add_export_parser(sub)
     lp = sub.add_parser(
         "list", help="list registered workloads / accelerators / "
-                     "objectives / backends (with config knobs)")
+                     "objectives / backends (with config knobs), or "
+                     "browse a schedule store with --store")
     lp.add_argument("--json", action="store_true",
                     help="machine-readable dump: workloads with param "
                          "schemas, accelerators, objectives, backends "
                          "(with docs), costmodels")
+    lp.add_argument("--store", default=None, metavar="DIR",
+                    help="list the artifacts in an ArtifactStore instead "
+                         "(shows per-object load warnings)")
     args = ap.parse_args(argv)
 
     from repro.search import BackendError, FingerprintMismatch, RegistryError
     from repro.serve import StoreError
     handler = {"search": _cmd_search, "submit": _cmd_submit,
                "serve": _cmd_serve, "report": _cmd_report,
+               "verify": _cmd_verify, "lint": _cmd_lint,
                "export": _cmd_export, "list": _cmd_list}[args.command]
     try:
         return handler(args)

@@ -1,0 +1,25 @@
+"""Static analysis over schedules and the engine itself.
+
+Two independent passes (ROADMAP open item 5(a) + determinism hygiene):
+
+* :mod:`repro.analysis.verify` — re-derives an artifact's groups,
+  schedulability, footprints, and cost consistency from its bytes alone
+  (no ``core.fusion``, no evaluator) and attaches a Chen-et-al DRAM-
+  traffic lower-bound :class:`~repro.analysis.verify.Certificate`;
+* :mod:`repro.analysis.bounds` — the communication lower bounds the
+  certificate is built from (per-group, per-schedule, whole-graph);
+* :mod:`repro.analysis.lint` — AST determinism lint over the engine
+  packages (``repro lint``; allowlist in ``pyproject.toml``).
+"""
+from repro.analysis.bounds import (TrafficBound, graph_bound, group_bound,
+                                   onchip_words_for, schedule_bound)
+from repro.analysis.lint import Finding, lint_file, run_lint
+from repro.analysis.verify import (Certificate, Check, VerificationReport,
+                                   verify_artifact, verify_store)
+
+__all__ = [
+    "Certificate", "Check", "Finding", "TrafficBound",
+    "VerificationReport", "graph_bound", "group_bound", "lint_file",
+    "onchip_words_for", "run_lint", "schedule_bound", "verify_artifact",
+    "verify_store",
+]

@@ -1,0 +1,393 @@
+"""AST determinism lint for the engine packages (``repro lint``).
+
+Everything this repo pins — bit-for-bit engine equivalence, fixed-seed
+search trajectories, ``ir1:`` fingerprints, content-addressed store keys
+— rests on determinism invariants that, until now, nothing enforced
+mechanically.  This linter walks the ASTs of the engine packages
+(``src/repro/{core,search,serve,costmodel,ir,hw}`` by default) and flags
+the four ways nondeterminism historically sneaks into systems like this:
+
+``global-random``
+    Module-global RNG state (``random.random()``, ``np.random.shuffle``,
+    ``from random import randint``): unseeded and shared across callers.
+    Constructing *owned* generators (``random.Random(seed)``,
+    ``np.random.default_rng(seed)``) is the sanctioned pattern and is not
+    flagged.
+``wall-clock``
+    Wall-time and entropy reads (``time.time``/``time_ns``,
+    ``datetime.now``/``utcnow``/``today``, ``os.urandom``,
+    ``uuid.uuid1``/``uuid4``) in engine paths.  Monotonic timers
+    (``perf_counter``/``monotonic``/``process_time``) are fine — they
+    measure, they don't feed results.
+``unordered-iter``
+    Direct iteration over ``set`` literals, ``set()``/``frozenset()``
+    calls, or ``os.listdir()`` in ``for``/comprehensions.  String hashing
+    is salted per process and directory order is filesystem-dependent, so
+    anything derived from such an iteration (fingerprints, store keys,
+    RNG consumption order) varies across runs unless ``sorted()`` wraps
+    the iterable.
+``mutable-default``
+    Mutable default arguments (``def f(x, cache={})``): call-order-
+    dependent shared state.
+
+Findings are suppressed only through the allowlist in ``pyproject.toml``:
+
+.. code-block:: toml
+
+    [tool.repro.lint]
+    allow = [
+        "src/repro/search/artifact.py::wall-clock::time.time::reason...",
+    ]
+
+Each entry is ``path::rule::symbol::justification`` — four ``::``-joined
+fields, justification mandatory.  Malformed entries are themselves
+findings (``bad-allow``), and entries that no longer match any finding
+are findings too (``stale-allow``), so the allowlist can neither rot nor
+hide unexplained suppressions.  The TOML fragment is read with a
+purpose-built mini-parser because the floor Python here (3.10) ships
+neither ``tomllib`` nor a bundled ``tomli``.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+#: packages linted by default (relative to ``<root>/src/repro``)
+DEFAULT_PACKAGES = ("core", "search", "serve", "costmodel", "ir", "hw")
+
+RULES = ("global-random", "wall-clock", "unordered-iter", "mutable-default")
+
+#: RNG *constructors*: owning a seeded generator is the sanctioned pattern
+_RNG_CONSTRUCTORS = {"Random", "SystemRandom", "default_rng", "Generator",
+                     "RandomState", "SeedSequence", "PCG64", "Philox",
+                     "MT19937", "BitGenerator"}
+_WALL_TIME = {"time", "time_ns"}
+_WALL_DATETIME = {"now", "utcnow", "today"}
+_WALL_UUID = {"uuid1", "uuid4"}
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One lint hit.  ``symbol`` is the stable handle allowlist entries
+    match on (e.g. ``time.time``, ``os.listdir``, a function name for
+    ``mutable-default``)."""
+
+    path: str
+    line: int
+    rule: str
+    symbol: str
+    message: str
+
+    def describe(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def to_dict(self) -> Dict[str, object]:
+        return {"path": self.path, "line": self.line, "rule": self.rule,
+                "symbol": self.symbol, "message": self.message}
+
+
+@dataclass(frozen=True)
+class AllowEntry:
+    path: str
+    rule: str
+    symbol: str
+    justification: str
+    raw: str
+
+    def matches(self, f: Finding) -> bool:
+        return (self.path == f.path and self.rule == f.rule
+                and self.symbol == f.symbol)
+
+
+def parse_allow_entries(raw: Sequence[str]
+                        ) -> Tuple[List[AllowEntry], List[Finding]]:
+    """Parse raw ``path::rule::symbol::justification`` strings; malformed
+    entries (wrong arity, empty field, unknown rule) become ``bad-allow``
+    findings instead of silently suppressing nothing."""
+    entries: List[AllowEntry] = []
+    bad: List[Finding] = []
+    for s in raw:
+        parts = s.split("::")
+        if len(parts) != 4 or not all(p.strip() for p in parts):
+            bad.append(Finding(
+                "pyproject.toml", 0, "bad-allow", s,
+                f"allowlist entry {s!r} is not "
+                f"'path::rule::symbol::justification' with every field "
+                f"(including the justification) non-empty"))
+            continue
+        path, rule, symbol, just = (p.strip() for p in parts)
+        if rule not in RULES:
+            bad.append(Finding(
+                "pyproject.toml", 0, "bad-allow", s,
+                f"allowlist entry {s!r} names unknown rule {rule!r} "
+                f"(rules: {', '.join(RULES)})"))
+            continue
+        entries.append(AllowEntry(path, rule, symbol, just, s))
+    return entries, bad
+
+
+def load_pyproject_allow(pyproject_path: str) -> List[str]:
+    """The raw ``[tool.repro.lint] allow`` list, via a mini TOML reader
+    (section + one string array; the floor interpreter has no tomllib)."""
+    try:
+        with open(pyproject_path) as f:
+            text = f.read()
+    except FileNotFoundError:
+        return []
+    sec = re.search(r"(?ms)^\[tool\.repro\.lint\]\s*$(.*?)(?=^\[|\Z)", text)
+    if not sec:
+        return []
+    arr = re.search(r"(?ms)^allow\s*=\s*\[(.*?)\]", sec.group(1))
+    if not arr:
+        return []
+    return [m.group(1) for m in
+            re.finditer(r'"((?:[^"\\]|\\.)*)"', arr.group(1))]
+
+
+def _dotted(node: ast.AST) -> Optional[List[str]]:
+    """``a.b.c`` attribute chain as ``["a", "b", "c"]`` (None when the
+    base is an expression, e.g. ``get_rng().random``)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return None
+
+
+class _FileLinter(ast.NodeVisitor):
+    def __init__(self, path: str):
+        self.path = path
+        self.findings: List[Finding] = []
+        # local names bound to each watched module / class
+        self.random_mods: Set[str] = set()     # `random`
+        self.numpy_mods: Set[str] = set()      # `numpy`
+        self.np_random_mods: Set[str] = set()  # `numpy.random` aliases
+        self.time_mods: Set[str] = set()
+        self.os_mods: Set[str] = set()
+        self.uuid_mods: Set[str] = set()
+        self.datetime_mods: Set[str] = set()   # the `datetime` module
+        self.datetime_classes: Set[str] = set()  # `datetime`/`date` classes
+
+    def _hit(self, node: ast.AST, rule: str, symbol: str,
+             message: str) -> None:
+        self.findings.append(Finding(
+            self.path, getattr(node, "lineno", 0), rule, symbol, message))
+
+    # ---- imports ----------------------------------------------------------------
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            bound = alias.asname or alias.name.split(".", 1)[0]
+            if alias.name == "random":
+                self.random_mods.add(bound)
+            elif alias.name == "numpy":
+                self.numpy_mods.add(bound)
+            elif alias.name == "numpy.random":
+                if alias.asname:
+                    self.np_random_mods.add(alias.asname)
+                else:
+                    self.numpy_mods.add("numpy")
+            elif alias.name == "time":
+                self.time_mods.add(bound)
+            elif alias.name == "os":
+                self.os_mods.add(bound)
+            elif alias.name == "uuid":
+                self.uuid_mods.add(bound)
+            elif alias.name == "datetime":
+                self.datetime_mods.add(bound)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        mod = node.module or ""
+        for alias in node.names:
+            name = alias.name
+            if mod == "random" and name not in _RNG_CONSTRUCTORS:
+                self._hit(node, "global-random", f"random.{name}",
+                          f"'from random import {name}' binds module-"
+                          f"global RNG state; own a random.Random(seed)")
+            elif mod == "numpy.random" and name not in _RNG_CONSTRUCTORS:
+                self._hit(node, "global-random", f"numpy.random.{name}",
+                          f"'from numpy.random import {name}' binds "
+                          f"global RNG state; own a default_rng(seed)")
+            elif mod == "time" and name in _WALL_TIME:
+                self._hit(node, "wall-clock", f"time.{name}",
+                          f"'from time import {name}' pulls wall-clock "
+                          f"into an engine path")
+            elif mod == "os" and name == "urandom":
+                self._hit(node, "wall-clock", "os.urandom",
+                          "'from os import urandom' pulls entropy into "
+                          "an engine path")
+            elif mod == "uuid" and name in _WALL_UUID:
+                self._hit(node, "wall-clock", f"uuid.{name}",
+                          f"'from uuid import {name}' is time/entropy-"
+                          f"derived")
+            elif mod == "datetime" and name in ("datetime", "date"):
+                self.datetime_classes.add(alias.asname or name)
+
+    # ---- calls ------------------------------------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        parts = _dotted(node.func)
+        if parts:
+            self._check_call(node, parts)
+        self.generic_visit(node)
+
+    def _check_call(self, node: ast.Call, parts: List[str]) -> None:
+        head, last = parts[0], parts[-1]
+        if head in self.random_mods and len(parts) == 2 \
+                and last not in _RNG_CONSTRUCTORS:
+            self._hit(node, "global-random", f"random.{last}",
+                      f"{'.'.join(parts)}() uses the module-global RNG; "
+                      f"thread an owned random.Random(seed) instead")
+        elif ((head in self.numpy_mods and len(parts) == 3
+               and parts[1] == "random")
+              or (head in self.np_random_mods and len(parts) == 2)) \
+                and last not in _RNG_CONSTRUCTORS:
+            self._hit(node, "global-random", f"numpy.random.{last}",
+                      f"{'.'.join(parts)}() uses numpy's global RNG; "
+                      f"thread an owned np.random.default_rng(seed)")
+        elif head in self.time_mods and len(parts) == 2 \
+                and last in _WALL_TIME:
+            self._hit(node, "wall-clock", f"time.{last}",
+                      f"{'.'.join(parts)}() reads the wall clock in an "
+                      f"engine path (perf_counter/monotonic measure "
+                      f"without feeding results)")
+        elif head in self.os_mods and len(parts) == 2 \
+                and last == "urandom":
+            self._hit(node, "wall-clock", "os.urandom",
+                      f"{'.'.join(parts)}() reads OS entropy in an "
+                      f"engine path")
+        elif head in self.uuid_mods and len(parts) == 2 \
+                and last in _WALL_UUID:
+            self._hit(node, "wall-clock", f"uuid.{last}",
+                      f"{'.'.join(parts)}() is time/entropy-derived")
+        elif last in _WALL_DATETIME and (
+                (head in self.datetime_classes and len(parts) == 2)
+                or (head in self.datetime_mods and len(parts) == 3
+                    and parts[1] in ("datetime", "date"))):
+            self._hit(node, "wall-clock", f"datetime.{last}",
+                      f"{'.'.join(parts)}() reads the wall clock in an "
+                      f"engine path")
+
+    # ---- unordered iteration ----------------------------------------------------
+    def _unordered_source(self, expr: ast.AST) -> Optional[str]:
+        if isinstance(expr, ast.Set):
+            return "set-literal"
+        if isinstance(expr, ast.Call):
+            parts = _dotted(expr.func)
+            if parts == ["set"] or parts == ["frozenset"]:
+                return f"{parts[0]}()"
+            if parts and len(parts) == 2 and parts[0] in self.os_mods \
+                    and parts[1] == "listdir":
+                return "os.listdir"
+            if parts == ["listdir"]:
+                return "os.listdir"
+        return None
+
+    def _check_iter(self, node: ast.AST, iter_expr: ast.AST) -> None:
+        src = self._unordered_source(iter_expr)
+        if src is not None:
+            self._hit(node, "unordered-iter", src,
+                      f"iteration order of {src} is not deterministic "
+                      f"across processes; wrap it in sorted() before "
+                      f"anything order-sensitive consumes it")
+
+    def visit_For(self, node: ast.For) -> None:
+        self._check_iter(node, node.iter)
+        self.generic_visit(node)
+
+    def _visit_comp(self, node) -> None:
+        for gen in node.generators:
+            self._check_iter(node, gen.iter)
+        self.generic_visit(node)
+
+    visit_ListComp = _visit_comp
+    visit_SetComp = _visit_comp
+    visit_DictComp = _visit_comp
+    visit_GeneratorExp = _visit_comp
+
+    # ---- mutable defaults -------------------------------------------------------
+    def _visit_func(self, node) -> None:
+        defaults = list(node.args.defaults) \
+            + [d for d in node.args.kw_defaults if d is not None]
+        for d in defaults:
+            bad = isinstance(d, (ast.List, ast.Dict, ast.Set))
+            if isinstance(d, ast.Call):
+                parts = _dotted(d.func)
+                bad = parts in (["list"], ["dict"], ["set"])
+            if bad:
+                self._hit(d, "mutable-default", node.name,
+                          f"def {node.name}(...) has a mutable default "
+                          f"argument — shared, call-order-dependent "
+                          f"state; default to None")
+        self.generic_visit(node)
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+
+def lint_file(path: str, display_path: Optional[str] = None
+              ) -> List[Finding]:
+    """Lint one Python source file; syntax errors are findings, not
+    crashes (a file the linter cannot parse is a file it cannot vouch
+    for)."""
+    shown = display_path or path
+    with open(path) as f:
+        source = f.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(shown, e.lineno or 0, "parse-error", "syntax",
+                        f"file does not parse: {e.msg}")]
+    linter = _FileLinter(shown)
+    linter.visit(tree)
+    return linter.findings
+
+
+def _default_paths(root: str) -> List[str]:
+    return [os.path.join(root, "src", "repro", pkg)
+            for pkg in DEFAULT_PACKAGES]
+
+
+def run_lint(root: str = ".", paths: Optional[Sequence[str]] = None,
+             allow_raw: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint ``paths`` (default: the engine packages under ``root``),
+    apply the allowlist (default: ``<root>/pyproject.toml``), and return
+    surviving findings — including ``bad-allow``/``stale-allow`` rows for
+    a defective allowlist — sorted by location."""
+    if allow_raw is None:
+        allow_raw = load_pyproject_allow(
+            os.path.join(root, "pyproject.toml"))
+    entries, findings = parse_allow_entries(allow_raw)
+
+    files: List[Tuple[str, str]] = []
+    for p in (paths if paths is not None else _default_paths(root)):
+        if os.path.isfile(p):
+            files.append((p, os.path.relpath(p, root)))
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames.sort()
+            for name in sorted(filenames):
+                if name.endswith(".py"):
+                    full = os.path.join(dirpath, name)
+                    files.append((full, os.path.relpath(full, root)))
+
+    used: Set[str] = set()
+    for full, rel in files:
+        for f in lint_file(full, rel.replace(os.sep, "/")):
+            matched = [e for e in entries if e.matches(f)]
+            if matched:
+                used.add(matched[0].raw)
+            else:
+                findings.append(f)
+    for e in entries:
+        if e.raw not in used:
+            findings.append(Finding(
+                "pyproject.toml", 0, "stale-allow", e.raw,
+                f"allowlist entry {e.raw!r} matches no finding — the "
+                f"code it excused moved or was fixed; delete the entry"))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule,
+                                           f.symbol))

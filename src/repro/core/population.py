@@ -524,7 +524,7 @@ class PopulationEvaluator:
     def _cost_rows(self, need: np.ndarray) -> None:
         """Run the cost model for not-yet-costed rows (once per group)."""
         ev = self.ev
-        for r in set(need.tolist()):
+        for r in sorted(set(need.tolist())):
             gmask = self._gmasks[r]
             d = ev._corr.get(gmask, _MISSING)
             if d is _MISSING:

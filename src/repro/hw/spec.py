@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field, replace
-from typing import Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 from repro.costmodel.accelerator import Accelerator
 
@@ -59,7 +59,7 @@ class MemLevel:
     bandwidth_gbps: float = 0.0
     energy_pj_per_word: Optional[float] = None
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if not self.name:
             raise HardwareError("memory level needs a name")
         if not (self.capacity_kib > 0):          # also rejects NaN
@@ -84,7 +84,7 @@ class ComputeArray:
     pe_y: int
     macs_per_pe: int = 1
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         for f in ("pe_x", "pe_y", "macs_per_pe"):
             if getattr(self, f) <= 0:
                 raise HardwareError(f"ComputeArray.{f} must be positive")
@@ -109,7 +109,7 @@ class HardwareSpec:
     clock_mhz: float = 200.0
     word_bytes: int = 2
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         object.__setattr__(self, "levels", tuple(self.levels))
         if self.dataflow not in DATAFLOWS:
             raise HardwareError(
@@ -216,7 +216,7 @@ class HardwareSpec:
         return "\n".join(rows)
 
     # ---- serialization ---------------------------------------------------------
-    def to_dict(self) -> Dict:
+    def to_dict(self) -> Dict[str, Any]:
         return {
             "name": self.name,
             "compute": {"pe_x": self.compute.pe_x,
@@ -234,7 +234,7 @@ class HardwareSpec:
         }
 
     @classmethod
-    def from_dict(cls, d: Dict) -> "HardwareSpec":
+    def from_dict(cls, d: Dict[str, Any]) -> "HardwareSpec":
         return cls(
             name=d["name"],
             compute=ComputeArray(**d["compute"]),

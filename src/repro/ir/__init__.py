@@ -36,7 +36,7 @@ describe the structure a genome actually indexes.
 """
 from __future__ import annotations
 
-from typing import Union
+from typing import Any, Callable, Tuple, Union
 
 from repro.core.graph import LayerGraph
 
@@ -78,7 +78,8 @@ def fingerprint(obj: Union[GraphIR, LayerGraph]) -> str:
     return ir.fingerprint()
 
 
-def from_jax(fn, example_args, *, name: str = "traced_cnn") -> GraphIR:
+def from_jax(fn: Callable[..., Any], example_args: Tuple[Any, ...], *,
+             name: str = "traced_cnn") -> GraphIR:
     """Trace a JAX function into canonical GraphIR (see
     :mod:`repro.ir.trace`; imports jax lazily)."""
     from repro.ir.trace import from_jax as _from_jax

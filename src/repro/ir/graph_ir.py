@@ -208,6 +208,6 @@ class GraphIR:
         return self.FINGERPRINT_FORMAT + ":" + hashlib.sha256(
             self.canonical_json().encode()).hexdigest()
 
-    def __repr__(self):
+    def __repr__(self) -> str:
         return (f"GraphIR({self.name!r}, {len(self.nodes)} nodes, "
                 f"{len(self.outputs)} outputs)")

@@ -19,7 +19,7 @@ its genome against (see ``repro.ir.graph_ir``).
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Any, Dict, List, Set
 
 from repro.ir.graph_ir import GraphIR, IRError
 
@@ -40,7 +40,7 @@ def topo_sort(ir: GraphIR) -> GraphIR:
             raise IRError(f"duplicate node name {nm!r} (nodes {seen[nm]} "
                           f"and {i})")
         seen[nm] = i
-    indeg = []
+    indeg: List[int] = []
     succs: List[List[int]] = [[] for _ in ir.nodes]
     for i, node in enumerate(ir.nodes):
         preds = node.get("inputs", [])
@@ -69,7 +69,7 @@ def topo_sort(ir: GraphIR) -> GraphIR:
                    outputs=list(ir.outputs), version=ir.version)
 
 
-def _is_noop(node: Dict) -> bool:
+def _is_noop(node: Dict[str, Any]) -> bool:
     """Identity glue: a single-input pool/upsample/concat whose output
     tensor equals its input tensor (k=1, stride 1, same geometry)."""
     if len(node.get("inputs", [])) != 1:
@@ -92,7 +92,7 @@ def fold_noops(ir: GraphIR) -> GraphIR:
     kept — folding it would rename the model's result."""
     alias: Dict[str, str] = {}
     outputs = set(ir.outputs)
-    kept = []
+    kept: List[Dict[str, Any]] = []
     for node in ir.nodes:
         if _is_noop(node) and node["name"] not in outputs:
             src = node["inputs"][0]
@@ -121,7 +121,7 @@ def eliminate_dead(ir: GraphIR) -> GraphIR:
     roots = ir.outputs or [
         n["name"] for n in ir.nodes
         if not any(n["name"] in m.get("inputs", []) for m in ir.nodes)]
-    live = set()
+    live: Set[str] = set()
     stack = list(roots)
     while stack:
         nm = stack.pop()

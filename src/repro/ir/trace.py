@@ -53,7 +53,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.ir.graph_ir import GraphIR
 from repro.ir.passes import canonicalize
@@ -91,12 +91,12 @@ class _Val:
     layout: Optional[str] = None
 
 
-def _is_literal(v) -> bool:
+def _is_literal(v: Any) -> bool:
     return not hasattr(v, "count")       # jax Var has .count, Literal doesn't
 
 
 class _Walker:
-    def __init__(self, name: str):
+    def __init__(self, name: str) -> None:
         self.name = name
         self.nodes: List[Dict[str, Any]] = []
         self._uid = 0
@@ -104,12 +104,13 @@ class _Walker:
 
     # ---- node emission ---------------------------------------------------------
     def _emit(self, base: str, kind: str, inputs: List[str],
-              **geom) -> str:
+              **geom: Any) -> str:
         self._uid += 1
-        node = {"name": f"{base}_{self._uid}", "kind": kind,
-                "inputs": inputs, **geom}
+        name = f"{base}_{self._uid}"
+        node: Dict[str, Any] = {"name": name, "kind": kind,
+                                "inputs": inputs, **geom}
         self.nodes.append(node)
-        return node["name"]
+        return name
 
     def _chw_of_shape(self, shape: Tuple[int, ...]) -> Tuple[int, int, int]:
         if len(shape) == 4:
@@ -142,7 +143,7 @@ class _Walker:
         return val
 
     # ---- value lookup ----------------------------------------------------------
-    def _val(self, v) -> _Val:
+    def _val(self, v: Any) -> _Val:
         if _is_literal(v):
             shape = tuple(getattr(getattr(v, "aval", None), "shape", ()))
             return _Val(None, (0, 0, 0), shape)
@@ -151,16 +152,16 @@ class _Walker:
             self.env[v] = _Val(None, (0, 0, 0), shape)
         return self.env[v]
 
-    def _bind(self, outvar, val: _Val) -> None:
+    def _bind(self, outvar: Any, val: _Val) -> None:
         if not _is_literal(outvar):       # dropvars are fine to bind too
             self.env[outvar] = val
 
     # ---- primitive handlers ----------------------------------------------------
-    def walk(self, jaxpr) -> None:
+    def walk(self, jaxpr: Any) -> None:
         for eqn in jaxpr.eqns:
             self._eqn(eqn)
 
-    def _eqn(self, eqn) -> None:
+    def _eqn(self, eqn: Any) -> None:
         prim = eqn.primitive.name
         if prim == "conv_general_dilated":
             return self._conv(eqn)
@@ -187,7 +188,7 @@ class _Walker:
             f"over H,W), elementwise add/mul, and concatenate — write this "
             f"op in those terms or author the workload as GraphIR JSON")
 
-    def _conv(self, eqn) -> None:
+    def _conv(self, eqn: Any) -> None:
         p = eqn.params
         dn = p["dimension_numbers"]
         lb, lf, *lspat = dn.lhs_spec
@@ -203,6 +204,7 @@ class _Walker:
             raise TraceError(f"conv batch size must be 1, got {lshape[lb]}")
         c, h, w = lshape[lf], lshape[lspat[0]], lshape[lspat[1]]
         lval = self._as_data(self._val(lhs), (c, h, w))
+        assert lval.node is not None      # _as_data promoted it
         lval.layout = "NHWC" if lf == 3 else "NCHW" if lf == 1 else None
         rshape = tuple(rhs.aval.shape)
         oshape = tuple(eqn.outvars[0].aval.shape)
@@ -225,7 +227,7 @@ class _Walker:
         self._bind(eqn.outvars[0],
                    _Val(node, (m, pq[0], pq[1]), oshape, layout))
 
-    def _dot(self, eqn) -> None:
+    def _dot(self, eqn: Any) -> None:
         (lc, rc), (lbat, rbat) = eqn.params["dimension_numbers"]
         lhs, rhs = eqn.invars[:2]
         lval, rval = self._val(lhs), self._val(rhs)
@@ -244,6 +246,7 @@ class _Walker:
         else:
             data, dcontract = lval, lc
         data = self._as_data(data)
+        assert data.node is not None      # _as_data promoted it
         cdim = math.prod(data.shape[d] for d in dcontract)
         oshape = tuple(eqn.outvars[0].aval.shape)
         m = math.prod(s for i, s in enumerate(oshape)
@@ -252,7 +255,7 @@ class _Walker:
                           m=m, p=1, q=1)
         self._bind(eqn.outvars[0], _Val(node, (m, 1, 1), oshape))
 
-    def _reduce_window(self, eqn) -> None:
+    def _reduce_window(self, eqn: Any) -> None:
         p = eqn.params
         win = tuple(p["window_dimensions"])
         strides = tuple(p["window_strides"])
@@ -290,6 +293,7 @@ class _Walker:
             raise TraceError(
                 f"reduce_window window {win} pools a non-spatial dim for "
                 f"the inferred layout (spatial dims {spatial})")
+        assert val.node is not None       # promoted above when raw
         c, h, w = val.chw
         oshape = tuple(eqn.outvars[0].aval.shape)
         r, s = win[spatial[0]], win[spatial[1]]
@@ -308,7 +312,7 @@ class _Walker:
         self._bind(eqn.outvars[0],
                    _Val(node, (c, pq[0], pq[1]), oshape, val.layout))
 
-    def _reduce(self, eqn) -> None:
+    def _reduce(self, eqn: Any) -> None:
         axes = tuple(eqn.params.get("axes", ()))
         val = self._val(eqn.invars[0])
         if val.node is None:              # reducing a parameter: constant
@@ -317,6 +321,7 @@ class _Walker:
             if len(val.shape) == 4 else set()
         oshape = tuple(eqn.outvars[0].aval.shape)
         if spatial and spatial.issubset(set(axes)):
+            assert val.node is not None
             c, h, w = val.chw
             node = self._emit("gpool", "global_pool", [val.node],
                               c=c, h=h, w=w, m=c, p=1, q=1, r=h, s=w)
@@ -332,7 +337,7 @@ class _Walker:
         # softmax-style reductions along features: fold into the producer
         self._bind(eqn.outvars[0], _Val(val.node, val.chw, oshape))
 
-    def _binary(self, eqn, kind: str) -> None:
+    def _binary(self, eqn: Any, kind: str) -> None:
         a, b = (self._val(v) for v in eqn.invars[:2])
         oshape = tuple(eqn.outvars[0].aval.shape)
         if a.node is not None and b.node is not None and a.node != b.node:
@@ -354,7 +359,7 @@ class _Walker:
                               _Val(None, (0, 0, 0), oshape))  # const fold
         self._bind(eqn.outvars[0], _Val(src.node, src.chw, oshape))
 
-    def _concat(self, eqn) -> None:
+    def _concat(self, eqn: Any) -> None:
         vals = [self._val(v) for v in eqn.invars]
         traced = [v for v in vals if v.node is not None]
         if not traced:
@@ -375,13 +380,14 @@ class _Walker:
         _c, h, w = traced[0].chw
         ctot = oshape[dim] if dim < len(oshape) else sum(
             v.chw[0] for v in traced)
-        node = self._emit("cat", "concat", [v.node for v in traced],
+        node = self._emit("cat", "concat",
+                          [v.node for v in traced if v.node is not None],
                           c=ctot, h=h, w=w, m=ctot, p=h, q=w)
         self._bind(eqn.outvars[0], _Val(node, (ctot, h, w), oshape,
                                         layout if len(oshape) == 4
                                         else None))
 
-    def _call(self, eqn) -> None:
+    def _call(self, eqn: Any) -> None:
         params = eqn.params
         inner = params.get("jaxpr") or params.get("call_jaxpr") \
             or params.get("fun_jaxpr")
@@ -395,7 +401,7 @@ class _Walker:
         for ov, iv in zip(eqn.outvars, jaxpr.outvars):
             self._bind(ov, self._val(iv))
 
-    def _alias(self, eqn) -> None:
+    def _alias(self, eqn: Any) -> None:
         vals = [self._val(v) for v in eqn.invars]
         src = next((v for v in vals if v.node is not None), vals[0])
         oshape = tuple(eqn.outvars[0].aval.shape)
@@ -413,7 +419,8 @@ class _Walker:
             self._bind(ov, _Val(src.node, chw, oshape, layout))
 
 
-def from_jax(fn, example_args: Tuple, *, name: str = "traced_cnn",
+def from_jax(fn: Callable[..., Any], example_args: Tuple[Any, ...], *,
+             name: str = "traced_cnn",
              canonical: bool = True) -> GraphIR:
     """Trace ``fn(*example_args)`` into a (by default canonicalized)
     :class:`GraphIR`.
@@ -427,7 +434,7 @@ def from_jax(fn, example_args: Tuple, *, name: str = "traced_cnn",
     closed = jax.make_jaxpr(fn)(*example_args)
     walker = _Walker(name)
     walker.walk(closed.jaxpr)
-    outputs = []
+    outputs: List[str] = []
     for ov in closed.jaxpr.outvars:
         val = walker._val(ov)
         if val.node is None:

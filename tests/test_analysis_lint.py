@@ -1,0 +1,227 @@
+"""repro.analysis.lint: rule detection on synthetic modules, allowlist
+semantics (match / stale / malformed), the pyproject mini-parser, and the
+gate the CI job runs — src/repro is clean under the repo allowlist."""
+import textwrap
+
+from repro.analysis.lint import (RULES, lint_file, load_pyproject_allow,
+                                 parse_allow_entries, run_lint)
+
+
+def _lint(tmp_path, source, name="mod.py"):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(source))
+    return lint_file(str(p), name)
+
+
+def _rules(findings):
+    return sorted((f.rule, f.symbol) for f in findings)
+
+
+# ---- global-random ---------------------------------------------------------------
+
+
+def test_global_random_module_calls_flagged(tmp_path):
+    found = _lint(tmp_path, """\
+        import random
+        import numpy as np
+        random.seed(0)
+        x = random.randint(0, 7)
+        y = np.random.rand(3)
+    """)
+    assert ("global-random", "random.seed") in _rules(found)
+    assert ("global-random", "random.randint") in _rules(found)
+    assert ("global-random", "numpy.random.rand") in _rules(found)
+
+
+def test_seeded_constructors_are_not_flagged(tmp_path):
+    found = _lint(tmp_path, """\
+        import random
+        import numpy as np
+        rng = random.Random(0)
+        g = np.random.default_rng(0)
+        legacy = np.random.RandomState(0)
+        x = rng.randint(0, 7) + g.integers(0, 7)
+    """)
+    assert found == []
+
+
+def test_from_import_of_random_function_flagged(tmp_path):
+    found = _lint(tmp_path, "from random import randint\n")
+    assert _rules(found) == [("global-random", "random.randint")]
+
+
+# ---- wall-clock ------------------------------------------------------------------
+
+
+def test_wall_clock_sources_flagged(tmp_path):
+    found = _lint(tmp_path, """\
+        import os
+        import time
+        import uuid
+        from datetime import datetime
+        a = time.time()
+        b = time.time_ns()
+        c = datetime.now()
+        d = os.urandom(16)
+        e = uuid.uuid4()
+    """)
+    rules = _rules(found)
+    for sym in ("time.time", "time.time_ns", "datetime.now", "os.urandom",
+                "uuid.uuid4"):
+        assert ("wall-clock", sym) in rules
+
+
+def test_monotonic_clocks_are_fine(tmp_path):
+    found = _lint(tmp_path, """\
+        import time
+        t0 = time.perf_counter()
+        t1 = time.monotonic()
+    """)
+    assert found == []
+
+
+# ---- unordered-iter --------------------------------------------------------------
+
+
+def test_iteration_over_set_flagged(tmp_path):
+    found = _lint(tmp_path, """\
+        import os
+        for x in {1, 2, 3}:
+            pass
+        ys = [y for y in set(range(4))]
+        zs = list(os.listdir("."))
+        for z in os.listdir("."):
+            pass
+    """)
+    rules = [f.rule for f in found]
+    assert rules.count("unordered-iter") == 3  # zs=list(...) is not iter'd
+
+
+def test_sorted_wrapper_is_fine(tmp_path):
+    found = _lint(tmp_path, """\
+        import os
+        for x in sorted({3, 1, 2}):
+            pass
+        for p in sorted(os.listdir(".")):
+            pass
+    """)
+    assert found == []
+
+
+# ---- mutable-default -------------------------------------------------------------
+
+
+def test_mutable_defaults_flagged(tmp_path):
+    found = _lint(tmp_path, """\
+        def f(xs=[]):
+            return xs
+        def g(*, opts={}):
+            return opts
+        def h(s=set()):
+            return s
+        def ok(xs=None, n=3, t=()):
+            return xs
+    """)
+    assert [f.symbol for f in found
+            if f.rule == "mutable-default"] == ["f", "g", "h"]
+
+
+# ---- parse errors are loud and unallowlistable -----------------------------------
+
+
+def test_syntax_error_reported_not_swallowed(tmp_path):
+    found = _lint(tmp_path, "def broken(:\n")
+    assert len(found) == 1
+    assert found[0].rule == "parse-error"
+    assert "parse-error" not in RULES  # cannot be allowlisted
+
+
+# ---- allowlist semantics ---------------------------------------------------------
+
+
+def test_allow_entry_suppresses_exact_match(tmp_path):
+    (tmp_path / "src" / "repro" / "core").mkdir(parents=True)
+    mod = tmp_path / "src" / "repro" / "core" / "clocky.py"
+    mod.write_text("import time\nT = time.time()\n")
+    allow = ["src/repro/core/clocky.py::wall-clock::time.time::"
+             "test fixture; value is discarded"]
+    findings = run_lint(str(tmp_path), allow_raw=allow)
+    assert findings == []
+
+
+def test_unused_allow_entry_is_stale(tmp_path):
+    (tmp_path / "src" / "repro" / "core").mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "core" / "clean.py").write_text("x = 1\n")
+    findings = run_lint(str(tmp_path), allow_raw=[
+        "src/repro/core/gone.py::wall-clock::time.time::was needed once"])
+    assert [f.rule for f in findings] == ["stale-allow"]
+    assert "gone.py" in findings[0].message
+
+
+def test_malformed_allow_entries_are_bad(tmp_path):
+    (tmp_path / "src" / "repro" / "core").mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "core" / "clean.py").write_text("x = 1\n")
+    findings = run_lint(str(tmp_path), allow_raw=[
+        "only::three::fields",                          # wrong arity
+        "a.py::wall-clock::time.time::",                # empty justification
+        "a.py::no-such-rule::x::because",               # unknown rule
+    ])
+    assert [f.rule for f in findings] == ["bad-allow"] * 3
+
+
+def test_parse_allow_entries_roundtrip():
+    entries, bad = parse_allow_entries(
+        ["src/a.py::wall-clock::time.time::logging timestamps only"])
+    assert bad == []
+    (e,) = entries
+    assert (e.path, e.rule, e.symbol) == ("src/a.py", "wall-clock",
+                                          "time.time")
+    assert e.justification.startswith("logging")
+
+
+# ---- pyproject mini-parser -------------------------------------------------------
+
+
+def test_load_pyproject_allow_reads_section(tmp_path):
+    pj = tmp_path / "pyproject.toml"
+    pj.write_text(textwrap.dedent("""\
+        [tool.other]
+        allow = ["decoy"]
+
+        [tool.repro.lint]
+        # comment line
+        allow = [
+            "src/a.py::wall-clock::time.time::why not",
+            "src/b.py::global-random::random.seed::legacy",
+        ]
+
+        [tool.after]
+        x = 1
+    """))
+    assert load_pyproject_allow(str(pj)) == [
+        "src/a.py::wall-clock::time.time::why not",
+        "src/b.py::global-random::random.seed::legacy",
+    ]
+
+
+def test_load_pyproject_allow_missing_section(tmp_path):
+    pj = tmp_path / "pyproject.toml"
+    pj.write_text("[project]\nname = 'x'\n")
+    assert load_pyproject_allow(str(pj)) == []
+
+
+# ---- the CI gate: the engine itself is clean -------------------------------------
+
+
+def test_engine_packages_are_lint_clean_under_repo_allowlist():
+    findings = run_lint(".")
+    assert findings == [], "\n".join(f.describe() for f in findings)
+
+
+def test_repo_allowlist_has_no_unexplained_suppressions():
+    raw = load_pyproject_allow("pyproject.toml")
+    entries, bad = parse_allow_entries(raw)
+    assert bad == []
+    for e in entries:
+        # a real justification, not a placeholder
+        assert len(e.justification.split()) >= 4, e.raw
