@@ -8,6 +8,7 @@ registries, export workload IR.
     repro serve --store schedules/ --requests jobs.json --workers 4
     repro report artifact.json [--schedule] [--history]
     repro verify artifact.json | repro verify --store schedules/
+    repro analyze mobilenet_v3 --accel simba [--json]
     repro lint [paths...]
     repro export --workload mobilenet_v3@hw=160 --out model.json
     repro list [--json] [--store schedules/]
@@ -61,6 +62,11 @@ def _add_spec_args(p) -> None:
                         "(ga: a step is one generation; island: one sync "
                         "barrier, i.e. up to ~10 generations; "
                         "random/exhaustive: one scoring chunk)")
+    p.add_argument("--spacemap", action="store_true",
+                   help="statically freeze provably forced-off genes and "
+                        "factorize the space into regions before searching "
+                        "(repro analyze shows the map; exhaustive then "
+                        "enumerates per region)")
 
 
 def _spec_from_args(args):
@@ -77,7 +83,8 @@ def _spec_from_args(args):
         objective=args.objective, backend=args.backend,
         costmodel=args.costmodel, backend_config=backend_config,
         workload_kwargs=json.loads(args.workload_kwargs),
-        seed=args.seed, budget=args.budget, patience=args.patience)
+        seed=args.seed, budget=args.budget, patience=args.patience,
+        spacemap=args.spacemap)
 
 
 def _add_search_parser(sub) -> None:
@@ -166,11 +173,37 @@ def _add_verify_parser(sub) -> None:
                    help="emit per-artifact check results as JSON")
 
 
+def _add_analyze_parser(sub) -> None:
+    p = sub.add_parser(
+        "analyze", help="static fusion-space analysis: classify every "
+                        "genome bit (forced_off / free / undecided), "
+                        "factorize the space into independent regions, "
+                        "and size the exact vs GA search problems "
+                        "(repro.analysis.spacemap)")
+    p.add_argument("workload",
+                   help="workload spec: a registered name (see `repro "
+                        "list`), name@key=value,... params, or "
+                        "file:model.json GraphIR")
+    p.add_argument("--workload-kwargs", default="{}", metavar="JSON",
+                   help="builder kwargs, e.g. '{\"hw\": 128}'")
+    p.add_argument("--accelerator", "--accel", dest="accelerator",
+                   default="simba",
+                   help="accelerator whose activation capacity decides the "
+                        "freeze (default: simba)")
+    p.add_argument("--costmodel", default="default",
+                   help="cost backend whose capacity rule applies "
+                        "(default|tpu; others freeze nothing)")
+    p.add_argument("--json", action="store_true",
+                   help="emit the full map (per-edge verdicts, regions, "
+                        "summary) as JSON")
+
+
 def _add_lint_parser(sub) -> None:
     p = sub.add_parser(
-        "lint", help="determinism lint over the engine packages "
-                     "(global RNG state, wall-clock reads, unordered "
-                     "iteration, mutable defaults)")
+        "lint", help="determinism + import-boundary lint over the engine "
+                     "packages (global RNG state, wall-clock reads, "
+                     "unordered iteration, mutable defaults, pinned "
+                     "checker/engine isolation)")
     p.add_argument("paths", nargs="*", metavar="PATH",
                    help="files/directories to lint (default: "
                         "src/repro/{core,search,serve,costmodel,ir,hw})")
@@ -364,6 +397,19 @@ def _cmd_verify(args) -> int:
     return 0 if all_ok else 1
 
 
+def _cmd_analyze(args) -> int:
+    from repro.analysis import build_spacemap
+    from repro.search import build_workload
+
+    graph = build_workload(args.workload, **json.loads(args.workload_kwargs))
+    sm = build_spacemap(graph, args.costmodel, args.accelerator)
+    if args.json:
+        print(json.dumps(sm.to_dict(), indent=2, sort_keys=True))
+        return 0
+    print(sm.describe())
+    return 0
+
+
 def _cmd_lint(args) -> int:
     from repro.analysis import run_lint
 
@@ -496,6 +542,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     _add_serve_parser(sub)
     _add_report_parser(sub)
     _add_verify_parser(sub)
+    _add_analyze_parser(sub)
     _add_lint_parser(sub)
     _add_export_parser(sub)
     lp = sub.add_parser(
@@ -515,8 +562,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     from repro.serve import StoreError
     handler = {"search": _cmd_search, "submit": _cmd_submit,
                "serve": _cmd_serve, "report": _cmd_report,
-               "verify": _cmd_verify, "lint": _cmd_lint,
-               "export": _cmd_export, "list": _cmd_list}[args.command]
+               "verify": _cmd_verify, "analyze": _cmd_analyze,
+               "lint": _cmd_lint, "export": _cmd_export,
+               "list": _cmd_list}[args.command]
     try:
         return handler(args)
     except BrokenPipeError:

@@ -8,18 +8,26 @@ Two independent passes (ROADMAP open item 5(a) + determinism hygiene):
   traffic lower-bound :class:`~repro.analysis.verify.Certificate`;
 * :mod:`repro.analysis.bounds` — the communication lower bounds the
   certificate is built from (per-group, per-schedule, whole-graph);
-* :mod:`repro.analysis.lint` — AST determinism lint over the engine
-  packages (``repro lint``; allowlist in ``pyproject.toml``).
+* :mod:`repro.analysis.lint` — AST determinism + import-boundary lint
+  over the engine packages (``repro lint``; allowlist and boundary table
+  in ``pyproject.toml``);
+* :mod:`repro.analysis.spacemap` — static fusion-space analysis
+  (``repro analyze``; ROADMAP open item 5(b)): classifies every genome
+  bit as ``forced_off`` / ``free`` / ``undecided`` and factorizes the
+  space into independently-searchable regions, again sharing no code
+  with the engine it prunes.
 """
 from repro.analysis.bounds import (TrafficBound, graph_bound, group_bound,
                                    onchip_words_for, schedule_bound)
 from repro.analysis.lint import Finding, lint_file, run_lint
+from repro.analysis.spacemap import (EdgeVerdict, Region, SpaceMap,
+                                     build_spacemap)
 from repro.analysis.verify import (Certificate, Check, VerificationReport,
                                    verify_artifact, verify_store)
 
 __all__ = [
-    "Certificate", "Check", "Finding", "TrafficBound",
-    "VerificationReport", "graph_bound", "group_bound", "lint_file",
-    "onchip_words_for", "run_lint", "schedule_bound", "verify_artifact",
-    "verify_store",
+    "Certificate", "Check", "EdgeVerdict", "Finding", "Region", "SpaceMap",
+    "TrafficBound", "VerificationReport", "build_spacemap", "graph_bound",
+    "group_bound", "lint_file", "onchip_words_for", "run_lint",
+    "schedule_bound", "verify_artifact", "verify_store",
 ]

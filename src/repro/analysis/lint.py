@@ -29,6 +29,20 @@ the four ways nondeterminism historically sneaks into systems like this:
 ``mutable-default``
     Mutable default arguments (``def f(x, cache={})``): call-order-
     dependent shared state.
+``import-boundary``
+    Architectural isolation pins, declared as a ``pyproject.toml`` table
+    mapping a file to the modules it must never import (directly, lazy
+    imports included)::
+
+        [tool.repro.lint.boundaries]
+        "src/repro/analysis/verify.py" = [
+            "repro.core.fusion", "repro.costmodel.evaluator"]
+
+    The independent checkers (``analysis.verify``, ``analysis.spacemap``)
+    must share no code with the engine they check — an engine bug must
+    not be able to hide its own evidence.  Boundary files are checked on
+    *every* lint run, whatever paths were passed; a table row naming a
+    missing file is itself a finding, so the table cannot rot.
 
 Findings are suppressed only through the allowlist in ``pyproject.toml``:
 
@@ -58,7 +72,8 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 #: packages linted by default (relative to ``<root>/src/repro``)
 DEFAULT_PACKAGES = ("core", "search", "serve", "costmodel", "ir", "hw")
 
-RULES = ("global-random", "wall-clock", "unordered-iter", "mutable-default")
+RULES = ("global-random", "wall-clock", "unordered-iter", "mutable-default",
+         "import-boundary")
 
 #: RNG *constructors*: owning a seeded generator is the sanctioned pattern
 _RNG_CONSTRUCTORS = {"Random", "SystemRandom", "default_rng", "Generator",
@@ -145,6 +160,78 @@ def load_pyproject_allow(pyproject_path: str) -> List[str]:
         return []
     return [m.group(1) for m in
             re.finditer(r'"((?:[^"\\]|\\.)*)"', arr.group(1))]
+
+
+def load_pyproject_boundaries(pyproject_path: str) -> Dict[str, List[str]]:
+    """The ``[tool.repro.lint.boundaries]`` table — quoted file path ->
+    list of module names it must not import — read with the same mini
+    TOML reader as the allowlist."""
+    try:
+        with open(pyproject_path) as f:
+            text = f.read()
+    except FileNotFoundError:
+        return {}
+    sec = re.search(
+        r"(?ms)^\[tool\.repro\.lint\.boundaries\]\s*$(.*?)(?=^\[|\Z)", text)
+    if not sec:
+        return {}
+    out: Dict[str, List[str]] = {}
+    for row in re.finditer(
+            r'(?ms)^"((?:[^"\\]|\\.)*)"\s*=\s*\[(.*?)\]', sec.group(1)):
+        out[row.group(1)] = [m.group(1) for m in
+                             re.finditer(r'"((?:[^"\\]|\\.)*)"',
+                                         row.group(2))]
+    return out
+
+
+def check_boundaries(root: str, boundaries: Dict[str, Sequence[str]]
+                     ) -> List[Finding]:
+    """Enforce the import-boundary table: every ``Import``/``ImportFrom``
+    in a listed file (top-level or lazy) is matched against that file's
+    forbidden module prefixes.  ``from repro.core import fusion`` counts
+    as importing ``repro.core.fusion``; relative imports are out of scope
+    (the pinned modules live in other packages)."""
+    findings: List[Finding] = []
+    for rel in sorted(boundaries):
+        full = os.path.join(root, rel)
+        shown = rel.replace(os.sep, "/")
+        forbidden = tuple(boundaries[rel])
+        if not os.path.isfile(full):
+            findings.append(Finding(
+                "pyproject.toml", 0, "import-boundary", rel,
+                f"boundary table names {rel!r} but no such file exists "
+                f"under the root — fix the path or delete the row"))
+            continue
+        with open(full) as f:
+            source = f.read()
+        try:
+            tree = ast.parse(source, filename=full)
+        except SyntaxError as e:
+            findings.append(Finding(
+                shown, e.lineno or 0, "parse-error", "syntax",
+                f"file does not parse: {e.msg}"))
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                mods = [a.name for a in node.names]
+            elif isinstance(node, ast.ImportFrom) and node.module \
+                    and not node.level:
+                mods = [node.module] + [f"{node.module}.{a.name}"
+                                        for a in node.names]
+            else:
+                continue
+            for mod in mods:
+                hit = next((fb for fb in forbidden
+                            if mod == fb or mod.startswith(fb + ".")), None)
+                if hit is not None:
+                    findings.append(Finding(
+                        shown, getattr(node, "lineno", 0),
+                        "import-boundary", hit,
+                        f"imports {mod}, but the boundary table pins this "
+                        f"file against {hit}: the independent checker "
+                        f"must share no code with the engine it checks"))
+                    break                    # one finding per import stmt
+    return findings
 
 
 def _dotted(node: ast.AST) -> Optional[List[str]]:
@@ -299,8 +386,8 @@ class _FileLinter(ast.NodeVisitor):
         self._check_iter(node, node.iter)
         self.generic_visit(node)
 
-    def _visit_comp(self, node) -> None:
-        for gen in node.generators:
+    def _visit_comp(self, node: ast.expr) -> None:
+        for gen in node.generators:      # type: ignore[attr-defined]
             self._check_iter(node, gen.iter)
         self.generic_visit(node)
 
@@ -310,7 +397,7 @@ class _FileLinter(ast.NodeVisitor):
     visit_GeneratorExp = _visit_comp
 
     # ---- mutable defaults -------------------------------------------------------
-    def _visit_func(self, node) -> None:
+    def _visit_func(self, node: ast.FunctionDef) -> None:
         defaults = list(node.args.defaults) \
             + [d for d in node.args.kw_defaults if d is not None]
         for d in defaults:
@@ -353,14 +440,21 @@ def _default_paths(root: str) -> List[str]:
 
 
 def run_lint(root: str = ".", paths: Optional[Sequence[str]] = None,
-             allow_raw: Optional[Sequence[str]] = None) -> List[Finding]:
+             allow_raw: Optional[Sequence[str]] = None,
+             boundaries: Optional[Dict[str, Sequence[str]]] = None
+             ) -> List[Finding]:
     """Lint ``paths`` (default: the engine packages under ``root``),
-    apply the allowlist (default: ``<root>/pyproject.toml``), and return
-    surviving findings — including ``bad-allow``/``stale-allow`` rows for
-    a defective allowlist — sorted by location."""
+    enforce the import-boundary table (default: the
+    ``[tool.repro.lint.boundaries]`` table — checked on *every* run,
+    whatever ``paths`` say), apply the allowlist (default:
+    ``<root>/pyproject.toml``), and return surviving findings — including
+    ``bad-allow``/``stale-allow`` rows for a defective allowlist — sorted
+    by location."""
+    pyproject = os.path.join(root, "pyproject.toml")
     if allow_raw is None:
-        allow_raw = load_pyproject_allow(
-            os.path.join(root, "pyproject.toml"))
+        allow_raw = load_pyproject_allow(pyproject)
+    if boundaries is None:
+        boundaries = load_pyproject_boundaries(pyproject)
     entries, findings = parse_allow_entries(allow_raw)
 
     files: List[Tuple[str, str]] = []
@@ -375,14 +469,18 @@ def run_lint(root: str = ".", paths: Optional[Sequence[str]] = None,
                     full = os.path.join(dirpath, name)
                     files.append((full, os.path.relpath(full, root)))
 
-    used: Set[str] = set()
+    raw_findings: List[Finding] = []
     for full, rel in files:
-        for f in lint_file(full, rel.replace(os.sep, "/")):
-            matched = [e for e in entries if e.matches(f)]
-            if matched:
-                used.add(matched[0].raw)
-            else:
-                findings.append(f)
+        raw_findings.extend(lint_file(full, rel.replace(os.sep, "/")))
+    raw_findings.extend(check_boundaries(root, boundaries))
+
+    used: Set[str] = set()
+    for f in raw_findings:
+        matched = [e for e in entries if e.matches(f)]
+        if matched:
+            used.add(matched[0].raw)
+        else:
+            findings.append(f)
     for e in entries:
         if e.raw not in used:
             findings.append(Finding(

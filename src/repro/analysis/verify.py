@@ -31,6 +31,10 @@ act-writes          per-tensor DRAM write events re-derived from group
                     boundaries match both cost records
 cost-consistency    per-group breakdowns cover the derived groups and sum
                     to the claimed ``best`` totals
+spacemap            (``spacemap=True`` runs) the stored static-analysis
+                    summary matches an independent re-derivation
+                    (:mod:`repro.analysis.spacemap`) and the genome sets
+                    no provably forced-off gene
 store-key           (``--store`` only) the object's content-address matches
 bounds              modeled traffic >= Chen-et-al lower bounds
                     (:mod:`repro.analysis.bounds`) — yields the certificate
@@ -45,11 +49,15 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import (TYPE_CHECKING, Any, Dict, List, Optional, Sequence,
+                    Tuple)
 
 from repro.analysis.bounds import (TrafficBound, graph_bound,
                                    onchip_words_for, schedule_bound)
 from repro.core.graph import Layer, LayerGraph
+
+if TYPE_CHECKING:                    # type-only: keeps the runtime import
+    from repro.search.artifact import ScheduleArtifact    # graph light
 
 #: relative tolerance for float totals (energy, cycles): the artifact's
 #: ``best`` was summed from the identical per-group tuples in the identical
@@ -357,7 +365,8 @@ def _act_capacity(costmodel: str, accelerator: str
 # ---- the verifier ----------------------------------------------------------------
 
 
-def _rebuild(artifact) -> Tuple[Optional[LayerGraph], Optional[str], Check]:
+def _rebuild(artifact: "ScheduleArtifact"
+             ) -> Tuple[Optional[LayerGraph], Optional[str], Check]:
     """(graph, recomputed fingerprint, graph-source check).
 
     Prefers the embedded GraphIR (self-contained artifacts); registry
@@ -392,7 +401,7 @@ def _rebuild(artifact) -> Tuple[Optional[LayerGraph], Optional[str], Check]:
         Check("graph-source", True, f"registry rebuild of {spec.workload!r}")
 
 
-def _check_fingerprint(artifact, fp: str) -> Check:
+def _check_fingerprint(artifact: "ScheduleArtifact", fp: str) -> Check:
     from repro.ir import GraphIR
     claimed = artifact.graph_fingerprint
     if claimed == fp:
@@ -409,7 +418,7 @@ def _check_fingerprint(artifact, fp: str) -> Check:
                  f"(IR bytes and genome disagree)")
 
 
-def _check_cost_consistency(artifact, view: _GraphView,
+def _check_cost_consistency(artifact: "ScheduleArtifact", view: _GraphView,
                             groups: List[List[int]]) -> Check:
     bds = artifact.group_breakdowns
     if not bds:
@@ -451,7 +460,46 @@ def _check_cost_consistency(artifact, view: _GraphView,
                  f"{len(bds)} group breakdowns sum to the claimed totals")
 
 
-def verify_artifact(artifact, *, expect_key: Optional[str] = None
+def _check_spacemap(artifact: "ScheduleArtifact", graph: LayerGraph,
+                    mask: int) -> Check:
+    """Re-derive the static fusion-space analysis and hold the artifact to
+    it: the stored summary must match the independent re-derivation and
+    the winning genome must not set any provably forced-off gene."""
+    # lazy: spacemap imports this module's _GraphView, so a top-level
+    # import here would be circular
+    from repro.analysis.spacemap import build_spacemap
+    claimed = artifact.spacemap
+    if claimed is None:
+        return Check(
+            "spacemap", False,
+            "spec ran with spacemap=True but the artifact carries no "
+            "spacemap summary (stripped or written by a legacy build)")
+    sm = build_spacemap(graph, artifact.spec.costmodel,
+                        artifact.spec.accelerator)
+    derived = sm.summary()
+    if derived != claimed:
+        diff = sorted(k for k in set(derived) | set(claimed)
+                      if derived.get(k) != claimed.get(k))
+        return Check(
+            "spacemap", False,
+            f"stored spacemap summary disagrees with the re-derived "
+            f"analysis on {diff} (e.g. {diff[0]!r}: stored "
+            f"{claimed.get(diff[0])!r}, derived {derived.get(diff[0])!r})")
+    hot = [i for i in sm.frozen_indices if (mask >> i) & 1]
+    if hot:
+        return Check(
+            "spacemap", False,
+            f"genome sets statically forced-off gene bits {hot} — every "
+            f"grouping containing those edges exceeds the activation "
+            f"capacity, so the claimed schedule cannot be valid")
+    return Check(
+        "spacemap", True,
+        f"{len(sm.frozen_indices)} frozen genes and {len(sm.regions)} "
+        f"regions re-derived identically; genome respects the freeze")
+
+
+def verify_artifact(artifact: "ScheduleArtifact", *,
+                    expect_key: Optional[str] = None
                     ) -> VerificationReport:
     """Re-derive and re-check every claim a :class:`ScheduleArtifact`
     makes (see module docstring for the check list).  ``expect_key``
@@ -536,6 +584,9 @@ def verify_artifact(artifact, *, expect_key: Optional[str] = None
         f"best={artifact.best.act_write_events}"))
 
     checks.append(_check_cost_consistency(artifact, view, groups))
+
+    if artifact.spacemap is not None or artifact.spec.spacemap:
+        checks.append(_check_spacemap(artifact, graph, mask))
 
     if expect_key is not None:
         from repro.serve.store import artifact_key

@@ -54,6 +54,15 @@ Backends: ``numpy`` (default) and ``jax`` (opt-in via
 runs the label-propagation inner loop as a jitted kernel and keeps the cost
 gathers in numpy — labels are integers, so the jax path stays bit-identical.
 Set ``REPRO_POP_ENGINE=off`` to force the per-state scalar path.
+
+Spacemap interaction (``SearchSpec(spacemap=True)``): statically frozen
+genes are masked out *upstream*, in :class:`repro.core.problem.
+FusionProblem`'s operators — every genome this engine receives simply has
+those mask bits permanently 0, so the ``(P, n_edges)`` matrices carry
+all-zero columns for frozen edges and no engine change (or conditional) is
+needed here.  The chain-run labeling is indifferent to which bits can vary,
+and the cost-correction table never sees a group that crosses a frozen
+edge because no genome ever fuses one.
 """
 from __future__ import annotations
 

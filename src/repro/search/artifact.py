@@ -90,6 +90,11 @@ class ScheduleArtifact(ImprovementRatios):
     #: every workload without a registry entry (``file:``/``ir:`` specs)
     #: so the artifact rebuilds/re-binds with no originating code at all
     graph_ir: Optional[Dict[str, Any]] = None
+    #: static fusion-space summary (``SearchSpec(spacemap=True)`` runs):
+    #: frozen gene indices, region intervals, search-space sizes — what
+    #: ``repro verify`` re-derives independently and compares
+    #: (:meth:`repro.analysis.spacemap.SpaceMap.summary`)
+    spacemap: Optional[Dict[str, Any]] = None
     created_unix: int = 0
     version: int = ARTIFACT_VERSION
     #: non-fatal schema degradations seen while loading (pre-cost-breakdown
@@ -175,6 +180,8 @@ class ScheduleArtifact(ImprovementRatios):
         }
         if self.graph_ir is not None:     # only self-contained artifacts
             d["graph_ir"] = self.graph_ir
+        if self.spacemap is not None:     # only spacemap=True searches
+            d["spacemap"] = self.spacemap
         return d
 
     @classmethod
@@ -228,6 +235,7 @@ class ScheduleArtifact(ImprovementRatios):
             backend_stats=d.get("backend_stats", {}),
             group_breakdowns=breakdowns,
             graph_ir=d.get("graph_ir"),
+            spacemap=d.get("spacemap"),
             created_unix=d.get("created_unix", 0),
             load_warnings=warnings,
         )
@@ -254,7 +262,9 @@ def make_artifact(spec: SearchSpec, graph: LayerGraph, result,
                   wall_s: float = 0.0,
                   backend_stats: Optional[Dict[str, Any]] = None,
                   group_breakdowns: Optional[List[CostBreakdown]] = None,
-                  embed_ir: bool = False) -> ScheduleArtifact:
+                  embed_ir: bool = False,
+                  spacemap: Optional[Dict[str, Any]] = None
+                  ) -> ScheduleArtifact:
     """Package a finished backend run (``result``: GAResult over fusion
     genomes) into a durable artifact.  ``embed_ir`` snapshots the graph's
     exact :class:`repro.ir.GraphIR` into the artifact (self-contained:
@@ -276,5 +286,6 @@ def make_artifact(spec: SearchSpec, graph: LayerGraph, result,
         backend_stats=dict(backend_stats or {}),
         group_breakdowns=list(group_breakdowns or []),
         graph_ir=graph.to_ir().to_dict() if embed_ir else None,
+        spacemap=spacemap,
         created_unix=int(time.time()),
     )

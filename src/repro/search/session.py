@@ -41,8 +41,8 @@ class _CustomObjectiveProblem(FusionProblem):
     know natively: costs still come from the memoized group cache, but the
     metric is the registered ``(ScheduleCost) -> float`` function."""
 
-    def __init__(self, graph, evaluator, objective: str):
-        super().__init__(graph, evaluator, objective)
+    def __init__(self, graph, evaluator, objective: str, spacemap=None):
+        super().__init__(graph, evaluator, objective, spacemap=spacemap)
         self._metric = OBJECTIVES.get(objective)
         self._baseline = self._metric(evaluator.layerwise())
 
@@ -100,12 +100,21 @@ class SearchSession:
         self.evaluator = Evaluator(self.graph, self.accelerator,
                                    em or DEFAULT_ENERGY,
                                    costmodel=costmodel_factory)
+        # static fusion-space analysis (opt-in): frozen genes + regions,
+        # derived independently of the engine (repro.analysis.spacemap)
+        self.spacemap = None
+        if spec.spacemap:
+            from repro.analysis.spacemap import build_spacemap
+            self.spacemap = build_spacemap(self.graph, spec.costmodel,
+                                           spec.accelerator)
         if spec.objective in NATIVE_OBJECTIVES:
             self.problem = FusionProblem(self.graph, self.evaluator,
-                                         spec.objective)
+                                         spec.objective,
+                                         spacemap=self.spacemap)
         else:
             self.problem = _CustomObjectiveProblem(self.graph, self.evaluator,
-                                                   spec.objective)
+                                                   spec.objective,
+                                                   spacemap=self.spacemap)
         self.result = None                 # GAResult after run()
         self.artifact: Optional[ScheduleArtifact] = None
 
@@ -165,7 +174,8 @@ class SearchSession:
             self.spec, self.graph, self.result,
             baseline=self.evaluator.layerwise(), best=best_cost,
             wall_s=wall_s, backend_stats=self.evaluator.cache_stats(),
-            group_breakdowns=breakdowns, embed_ir=self.embed_ir)
+            group_breakdowns=breakdowns, embed_ir=self.embed_ir,
+            spacemap=self.spacemap.summary() if self.spacemap else None)
         return self.artifact
 
     # ---- compatibility ----------------------------------------------------------
@@ -185,6 +195,7 @@ def search(workload: str, accelerator: str = "simba", *,
            objective: str = "edp", backend: str = "ga",
            costmodel: str = "default", seed: int = 0,
            budget: Optional[int] = None, patience: Optional[int] = None,
+           spacemap: bool = False,
            backend_config: Optional[dict] = None,
            workload_kwargs: Optional[dict] = None,
            progress: Optional[Callable[[Progress], None]] = None
@@ -197,5 +208,6 @@ def search(workload: str, accelerator: str = "simba", *,
                       costmodel=costmodel,
                       backend_config=backend_config or {},
                       workload_kwargs=workload_kwargs or {},
-                      seed=seed, budget=budget, patience=patience)
+                      seed=seed, budget=budget, patience=patience,
+                      spacemap=spacemap)
     return SearchSession(spec).run(progress=progress)

@@ -44,6 +44,12 @@ class SearchSpec:
     seed: int = 0
     budget: Optional[int] = None
     patience: Optional[int] = None
+    #: opt into the static fusion-space analysis
+    #: (:mod:`repro.analysis.spacemap`): provably forced-off genes are
+    #: frozen out of the genome and the exhaustive backend enumerates per
+    #: independent region.  Fixed-seed trajectories differ from
+    #: ``spacemap=False`` runs (fewer RNG draws), hence opt-in.
+    spacemap: bool = False
 
     def __post_init__(self):
         # freeze the nested dicts against aliasing surprises: specs are
@@ -55,7 +61,14 @@ class SearchSpec:
 
     # ---- serialization --------------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        if not d["spacemap"]:
+            # default-off fields serialize only when set: the canonical
+            # spec JSON (and therefore every existing store content
+            # address, which hashes it) is unchanged for spacemap-less
+            # specs written by any earlier build
+            del d["spacemap"]
+        return d
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "SearchSpec":

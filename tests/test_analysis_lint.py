@@ -3,7 +3,9 @@ semantics (match / stale / malformed), the pyproject mini-parser, and the
 gate the CI job runs — src/repro is clean under the repo allowlist."""
 import textwrap
 
-from repro.analysis.lint import (RULES, lint_file, load_pyproject_allow,
+from repro.analysis.lint import (RULES, check_boundaries, lint_file,
+                                 load_pyproject_allow,
+                                 load_pyproject_boundaries,
                                  parse_allow_entries, run_lint)
 
 
@@ -208,6 +210,111 @@ def test_load_pyproject_allow_missing_section(tmp_path):
     pj = tmp_path / "pyproject.toml"
     pj.write_text("[project]\nname = 'x'\n")
     assert load_pyproject_allow(str(pj)) == []
+
+
+# ---- import-boundary -------------------------------------------------------------
+
+
+def test_boundary_violations_flagged_top_level_and_lazy(tmp_path):
+    mod = tmp_path / "checker.py"
+    mod.write_text(textwrap.dedent("""\
+        import repro.core.fusion
+        from repro.costmodel import something_else
+
+        def lazy():
+            from repro.costmodel.evaluator import Evaluator
+            return Evaluator
+    """))
+    found = check_boundaries(str(tmp_path), {
+        "checker.py": ["repro.core.fusion", "repro.costmodel.evaluator"]})
+    assert _rules(found) == [
+        ("import-boundary", "repro.core.fusion"),
+        ("import-boundary", "repro.costmodel.evaluator"),  # lazy counts
+    ]
+    assert all(f.path == "checker.py" for f in found)
+
+
+def test_boundary_matches_from_import_of_pinned_module(tmp_path):
+    # `from repro.core import fusion` imports repro.core.fusion just the
+    # same; `import repro.core.graph` must NOT match the fusion pin
+    mod = tmp_path / "checker.py"
+    mod.write_text("from repro.core import fusion\n"
+                   "import repro.core.graph\n")
+    found = check_boundaries(str(tmp_path),
+                             {"checker.py": ["repro.core.fusion"]})
+    assert _rules(found) == [("import-boundary", "repro.core.fusion")]
+
+
+def test_clean_file_produces_no_boundary_findings(tmp_path):
+    (tmp_path / "checker.py").write_text(
+        "import repro.core.graph\nfrom repro.analysis import bounds\n")
+    assert check_boundaries(str(tmp_path), {
+        "checker.py": ["repro.core.fusion",
+                       "repro.costmodel.evaluator"]}) == []
+
+
+def test_boundary_row_naming_missing_file_is_a_finding(tmp_path):
+    found = check_boundaries(str(tmp_path),
+                             {"gone/nowhere.py": ["repro.core.fusion"]})
+    assert [f.rule for f in found] == ["import-boundary"]
+    assert found[0].path == "pyproject.toml"
+    assert "no such file" in found[0].message
+
+
+def test_boundaries_checked_on_every_run_regardless_of_paths(tmp_path):
+    (tmp_path / "checker.py").write_text("import repro.core.fusion\n")
+    findings = run_lint(str(tmp_path), paths=[],   # lint NO files...
+                        allow_raw=[],
+                        boundaries={"checker.py": ["repro.core.fusion"]})
+    assert _rules(findings) == [  # ...the boundary table still fires
+        ("import-boundary", "repro.core.fusion")]
+
+
+def test_allow_entry_can_suppress_a_boundary_finding(tmp_path):
+    (tmp_path / "checker.py").write_text("import repro.core.fusion\n")
+    findings = run_lint(
+        str(tmp_path), paths=[],
+        allow_raw=["checker.py::import-boundary::repro.core.fusion::"
+                   "transitional shim while the checker is split out"],
+        boundaries={"checker.py": ["repro.core.fusion"]})
+    assert findings == []
+
+
+def test_load_pyproject_boundaries_reads_table(tmp_path):
+    pj = tmp_path / "pyproject.toml"
+    pj.write_text(textwrap.dedent("""\
+        [tool.repro.lint]
+        allow = []
+
+        [tool.repro.lint.boundaries]
+        # the checkers must not lean on the engine
+        "src/a.py" = ["repro.core.fusion", "repro.costmodel.evaluator"]
+        "src/b.py" = [
+            "repro.core.fusion",
+        ]
+
+        [tool.after]
+        x = 1
+    """))
+    assert load_pyproject_boundaries(str(pj)) == {
+        "src/a.py": ["repro.core.fusion", "repro.costmodel.evaluator"],
+        "src/b.py": ["repro.core.fusion"],
+    }
+
+
+def test_load_pyproject_boundaries_missing_section(tmp_path):
+    pj = tmp_path / "pyproject.toml"
+    pj.write_text("[project]\nname = 'x'\n")
+    assert load_pyproject_boundaries(str(pj)) == {}
+    assert load_pyproject_boundaries(str(tmp_path / "absent.toml")) == {}
+
+
+def test_repo_boundary_table_pins_both_checkers():
+    table = load_pyproject_boundaries("pyproject.toml")
+    for rel in ("src/repro/analysis/verify.py",
+                "src/repro/analysis/spacemap.py"):
+        assert set(table[rel]) == {"repro.core.fusion",
+                                   "repro.costmodel.evaluator"}, rel
 
 
 # ---- the CI gate: the engine itself is clean -------------------------------------

@@ -1,0 +1,407 @@
+"""repro.analysis.spacemap: static verdicts are sound against brute
+force, regions confine every group, the per-region exhaustive composition
+is exact, search operators respect the freeze, artifacts round-trip the
+summary through ``repro verify``, and the checker stays engine-isolated."""
+import dataclasses
+import os
+import random
+import subprocess
+import sys
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.analysis import SpaceMap, build_spacemap, verify_artifact
+from repro.analysis.verify import _GraphView
+from repro.core.fusion import FusionState
+from repro.core.graph import Layer, LayerGraph
+from repro.search import (OBJECTIVES, BackendError, ScheduleArtifact,
+                          SearchSession, SearchSpec, build_accelerator,
+                          register_objective, search)
+
+# ---- graphs ----------------------------------------------------------------------
+# simba's activation buffer is 32768 words: the `small` layers below
+# (8ch, 16x16 maps) can all fuse freely, the `big` layers (64ch, 64x64
+# maps, 3-row windows) provably cannot pair up — so hand-built graphs hit
+# all three verdicts and factorize into >1 region.
+
+
+def small_chain(n=4):
+    g = LayerGraph("small_chain")
+    prev = g.add(Layer(name="input", kind="input", m=8, p=16, q=16))
+    for i in range(n):
+        prev = g.add(Layer(name=f"c{i}", kind="conv", c=8, h=16, w=16,
+                           m=8, p=16, q=16, r=3, s=3, padding=(1, 1)),
+                     [prev])
+    return g
+
+
+def skip_graph():
+    g = LayerGraph("skip_graph")
+    i = g.add(Layer(name="input", kind="input", m=8, p=16, q=16))
+    a = g.add(Layer(name="a", kind="conv", c=8, h=16, w=16, m=8, p=16,
+                    q=16, r=3, s=3, padding=(1, 1)), [i])
+    b = g.add(Layer(name="b", kind="conv", c=8, h=16, w=16, m=8, p=16,
+                    q=16, r=3, s=3, padding=(1, 1)), [a])
+    g.add(Layer(name="add", kind="add", c=8, h=16, w=16, m=8, p=16, q=16),
+          [a, b])
+    return g
+
+
+def big_chain(n=3):
+    """Every conv-conv pair over-fills the buffer: bits 1..n-1 freeze."""
+    g = LayerGraph("big_chain")
+    prev = g.add(Layer(name="input", kind="input", m=64, p=64, q=64))
+    for i in range(n):
+        prev = g.add(Layer(name=f"c{i}", kind="conv", c=64, h=64, w=64,
+                           m=64, p=64, q=64, r=3, s=3, padding=(1, 1)),
+                     [prev])
+    return g
+
+
+def mixed():
+    """Small fusable head, big frozen tail: one frozen gene splits the
+    graph into two regions."""
+    g = LayerGraph("mixed")
+    prev = g.add(Layer(name="input", kind="input", m=8, p=16, q=16))
+    for i in range(3):
+        prev = g.add(Layer(name=f"s{i}", kind="conv", c=8, h=16, w=16,
+                           m=8, p=16, q=16, r=3, s=3, padding=(1, 1)),
+                     [prev])
+    prev = g.add(Layer(name="up", kind="conv", c=8, h=16, w=16, m=64,
+                       p=64, q=64, r=3, s=3, padding=(1, 1)), [prev])
+    for i in range(2):
+        prev = g.add(Layer(name=f"b{i}", kind="conv", c=64, h=64, w=64,
+                           m=64, p=64, q=64, r=3, s=3, padding=(1, 1)),
+                     [prev])
+    return g
+
+
+def session_for(graph, *, backend="exhaustive", spacemap=True, **spec_kwargs):
+    return SearchSession.from_objects(
+        graph, build_accelerator("simba"), backend=backend,
+        spacemap=spacemap, **spec_kwargs)
+
+
+# ---- classification sanity -------------------------------------------------------
+
+
+def test_hand_built_graphs_hit_all_three_verdicts():
+    sm = build_spacemap(mixed(), "default", "simba")
+    assert sm.frozen_indices == (5,)             # b0 -> b1 cannot pair
+    assert [[r.lo, r.hi] for r in sm.regions] == [[0, 5], [6, 6]]
+    assert sm.genome_length == sm.n_edges - 1 == 5
+    sm = build_spacemap(big_chain(), "default", "simba")
+    assert sm.frozen_indices == (1, 2)
+    assert len(sm.regions) == 3
+    sm = build_spacemap(small_chain(), "default", "simba")
+    assert sm.frozen_indices == ()               # everything fits
+    assert {v.verdict for v in sm.verdicts} == {"free"}
+
+
+def test_unknown_costmodel_degrades_to_a_noop_map():
+    sm = build_spacemap(big_chain(), "nosuchmodel", "simba")
+    assert sm.capacity_words is None
+    assert sm.frozen_indices == ()
+    assert all(v.verdict == "undecided" for v in sm.verdicts)
+    assert len(sm.regions) == 1                  # whole graph, one region
+
+
+# ---- soundness against brute force (hypothesis) ----------------------------------
+
+
+@st.composite
+def random_dags(draw):
+    """Small random conv chains, channels/spatial drawn so both the
+    frozen and the free verdict occur across examples, plus an optional
+    skip edge (a residual add over the last two convs)."""
+    ch = draw(st.sampled_from([4, 8, 64]))
+    hw = draw(st.sampled_from([16, 64]))
+    n = draw(st.integers(min_value=2, max_value=4))
+    with_skip = draw(st.booleans())
+    g = LayerGraph(f"rand_c{ch}_s{hw}_n{n}_{int(with_skip)}")
+    prev = g.add(Layer(name="input", kind="input", m=ch, p=hw, q=hw))
+    convs = []
+    for i in range(n):
+        prev = g.add(Layer(name=f"c{i}", kind="conv", c=ch, h=hw, w=hw,
+                           m=ch, p=hw, q=hw, r=3, s=3, padding=(1, 1)),
+                     [prev])
+        convs.append(prev)
+    if with_skip and n >= 2:
+        g.add(Layer(name="add", kind="add", c=ch, h=hw, w=hw, m=ch, p=hw,
+                    q=hw), [convs[-2], convs[-1]])
+    return g
+
+
+@settings(max_examples=20, deadline=None)
+@given(graph=random_dags())
+def test_forced_off_illegal_and_free_legal_under_brute_force(graph):
+    session = session_for(graph)
+    sm, view = session.spacemap, _GraphView(graph)
+    frozen = sm.frozen_mask
+    # forced_off is sound: EVERY genome containing a frozen bit is invalid
+    for mask in range(1 << view.m):
+        if mask & frozen:
+            assert session.problem.fitness(
+                FusionState.from_mask(graph, mask)) == 0.0
+    # free is sound: every subset of free bits whose condensation the
+    # independent checker calls acyclic evaluates to a real cost
+    free_bits = [v.index for v in sm.free]
+    for sub in range(1 << len(free_bits)):
+        mask = 0
+        for j, i in enumerate(free_bits):
+            if (sub >> j) & 1:
+                mask |= 1 << i
+        if view.condensation_acyclic(view.groups_of(mask)):
+            state = FusionState.from_mask(graph, mask)
+            assert session.evaluator.evaluate(state) is not None, \
+                f"free-bit genome {mask:#x} scored invalid"
+
+
+@settings(max_examples=20, deadline=None)
+@given(graph=random_dags())
+def test_regions_confine_every_group(graph):
+    sm = build_spacemap(graph, "default", "simba")
+    view = _GraphView(graph)
+    spans = [(r.lo, r.hi) for r in sm.regions]
+    for mask in range(1 << view.m):
+        if mask & sm.frozen_mask:
+            continue
+        for members in view.groups_of(mask):
+            lo, hi = min(members), max(members)
+            assert any(rl <= lo and hi <= rh for rl, rh in spans), \
+                f"group {members} of genome {mask:#x} straddles a cut"
+
+
+# ---- per-region exhaustive == global brute force ---------------------------------
+
+
+@pytest.mark.parametrize("objective", ["edp", "energy", "cycles", "dram"])
+@pytest.mark.parametrize("builder", [small_chain, skip_graph, big_chain,
+                                     mixed])
+def test_per_region_composition_matches_flat_brute_force(builder, objective):
+    graph = builder()
+    flat = session_for(graph, spacemap=False, objective=objective)
+    flat_art = flat.run()
+    fact = session_for(graph, spacemap=True, objective=objective)
+    fact_art = fact.run()
+    assert fact_art.best_fitness == pytest.approx(
+        flat_art.best_fitness, rel=1e-12)
+    assert fact.result.best_state.mask & fact.spacemap.frozen_mask == 0
+    # factorization never scores more states than the flat enumeration
+    assert fact_art.evaluations <= flat_art.evaluations
+
+
+def test_per_region_composition_matches_flat_on_tpu_costmodel():
+    graph = mixed()
+    flat = session_for(graph, spacemap=False, costmodel="tpu").run()
+    fact = session_for(graph, spacemap=True, costmodel="tpu").run()
+    assert fact.best_fitness == pytest.approx(flat.best_fitness, rel=1e-12)
+
+
+def test_vgg16_solved_exactly_by_region_composition():
+    """ROADMAP 5(b): the paper's 2^21 VGG-16 space, exactly — a few dozen
+    evaluations instead of two million (fixed-seed pin)."""
+    session = SearchSession(SearchSpec(
+        workload="vgg16", backend="exhaustive", spacemap=True))
+    art = session.run()
+    sm = session.spacemap
+    assert sm.raw_space_size() == 1 << 21
+    assert sm.frozen_indices == (1, 4, 7, 8, 11, 12, 15, 16)
+    assert len(sm.regions) == 9
+    assert art.evaluations == 37
+    assert session.result.best_state.mask == 0x1A4225
+    assert art.best_fitness == pytest.approx(1.0273429656033972, rel=1e-12)
+    report = verify_artifact(art)
+    assert report.ok, report.describe()
+    assert report.check("spacemap").ok
+
+
+def test_fixed_seed_ga_with_spacemap_is_no_worse_than_baseline():
+    def ga(spacemap):
+        return search("vgg16", "simba", backend="ga", seed=0,
+                      spacemap=spacemap,
+                      backend_config={"preset": "fast", "generations": 8})
+    base, frozen = ga(False), ga(True)
+    assert frozen.best_fitness >= base.best_fitness
+    # fixed-seed pins for BOTH trajectories: the spacemap path draws over
+    # the active bits only, so it has its own pin rather than bit-identity
+    assert base.best_fitness == pytest.approx(1.027324133811833, rel=1e-12)
+    assert frozen.best_fitness == pytest.approx(1.0273429656033972,
+                                                rel=1e-12)
+
+
+# ---- exhaustive guards -----------------------------------------------------------
+
+
+def test_guard_reports_largest_region_when_factorized_space_too_big():
+    with pytest.raises(BackendError, match="largest spacemap region"):
+        search("unet", backend="exhaustive", spacemap=True)
+
+
+def test_guard_explains_why_custom_objectives_do_not_compose():
+    name = "test_spacemap_cycles_objective"
+    if name not in OBJECTIVES:
+        @register_objective(name)
+        def cycles_metric(cost):
+            return cost.cycles
+    with pytest.raises(BackendError,
+                       match="not group-additive") as excinfo:
+        search("unet", backend="exhaustive", objective=name, spacemap=True)
+    assert "a spacemap factorizes this into" in str(excinfo.value)
+
+
+# ---- operator masking ------------------------------------------------------------
+
+
+def test_search_operators_never_set_frozen_bits():
+    session = session_for(mixed(), backend="ga")
+    problem, sm = session.problem, session.spacemap
+    frozen = sm.frozen_mask
+    assert frozen                                # the test needs teeth
+    rng = random.Random(0)
+    pop = [problem.random_genome(rng) for _ in range(16)]
+    for _ in range(200):
+        child = problem.mutate(
+            problem.crossover(rng.choice(pop), rng.choice(pop), rng), rng)
+        assert child.mask & frozen == 0
+        pop.append(child)
+    assert all(g.mask & frozen == 0 for g in pop)
+    for nb in problem.neighbors(problem.initial()):
+        assert nb.mask & frozen == 0
+    assert problem.space_size() == 1 << len(sm.active_indices)
+    masks = {g.mask for g in problem.enumerate()}
+    assert len(masks) == problem.space_size()    # no duplicates, full cover
+    assert all(m & frozen == 0 for m in masks)
+
+
+def test_fully_decided_spacemap_leaves_operators_noops():
+    """Zero active bits (every gene frozen): mutate must return the
+    genome unchanged instead of looping forever, sampling and enumeration
+    collapse to the single layerwise genome."""
+    from repro.core.problem import FusionProblem
+    graph = big_chain(2)
+    session = session_for(graph, backend="ga")
+    sm = build_spacemap(graph, "default", "simba")
+    all_off = SpaceMap(
+        graph_name=sm.graph_name, costmodel=sm.costmodel,
+        accelerator=sm.accelerator, n_edges=sm.n_edges,
+        capacity_words=sm.capacity_words, capacity_how=sm.capacity_how,
+        verdicts=[dataclasses.replace(v, verdict="forced_off")
+                  for v in sm.verdicts], regions=[])
+    assert all_off.genome_length == 0
+    problem = FusionProblem(graph, session.evaluator, "edp",
+                            spacemap=all_off)
+    g = problem.initial()
+    assert problem.mutate(g, random.Random(0)).mask == g.mask
+    assert problem.random_genome(random.Random(1)).mask == 0
+    assert [s.mask for s in problem.enumerate()] == [0]
+    assert problem.space_size() == 1
+
+
+# ---- spec / artifact serialization -----------------------------------------------
+
+
+def test_spec_spacemap_default_stays_off_the_wire():
+    d = SearchSpec(workload="vgg16").to_dict()
+    assert "spacemap" not in d                   # store keys unchanged
+    assert SearchSpec.from_dict(d).spacemap is False
+    d = SearchSpec(workload="vgg16", spacemap=True).to_dict()
+    assert d["spacemap"] is True
+    assert SearchSpec.from_dict(d).spacemap is True
+
+
+def _spacemap_artifact():
+    session = session_for(mixed())
+    return session, session.run()
+
+
+def test_artifact_roundtrips_spacemap_summary_and_verifies():
+    session, art = _spacemap_artifact()
+    assert art.spacemap == session.spacemap.summary()
+    rt = ScheduleArtifact.from_json(art.to_json())
+    assert rt.spacemap == art.spacemap
+    report = verify_artifact(rt)
+    assert report.ok, report.describe()
+    assert "re-derived identically" in report.check("spacemap").detail
+
+
+def test_spacemap_off_artifacts_carry_no_summary_or_check():
+    session = session_for(mixed(), spacemap=False)
+    art = session.run()
+    assert art.spacemap is None
+    assert "spacemap" not in art.to_dict()
+    assert verify_artifact(art).check("spacemap") is None
+
+
+def test_genome_setting_a_frozen_bit_fails_verification():
+    session, art = _spacemap_artifact()
+    bit = session.spacemap.frozen_indices[0]
+    bad = dataclasses.replace(art,
+                              genome_mask=art.genome_mask | (1 << bit))
+    check = verify_artifact(bad).check("spacemap")
+    assert not check.ok
+    assert "forced-off" in check.detail
+
+
+def test_tampered_spacemap_summary_fails_verification():
+    _, art = _spacemap_artifact()
+    forged = dict(art.spacemap)
+    forged["forced_off"] = []
+    check = verify_artifact(
+        dataclasses.replace(art, spacemap=forged)).check("spacemap")
+    assert not check.ok
+    assert "disagrees" in check.detail
+
+
+def test_stripped_spacemap_summary_fails_verification():
+    _, art = _spacemap_artifact()
+    check = verify_artifact(
+        dataclasses.replace(art, spacemap=None)).check("spacemap")
+    assert not check.ok
+    assert "carries no" in check.detail
+
+
+# ---- engine isolation ------------------------------------------------------------
+
+
+def test_spacemap_imports_neither_fusion_nor_evaluator():
+    """The acceptance pin (same rule ``repro lint`` enforces through the
+    pyproject boundary table): the analyzer that prunes the engine's
+    search space shares no code with the engine it prunes.  Source-level
+    — ``repro.core``'s package init eagerly re-exports ``fusion``, so
+    *transitive* loading is unavoidable; what is banned is this module
+    naming either engine module in any import statement, lazy included."""
+    import repro.analysis.spacemap as spacemap
+    with open(spacemap.__file__) as f:
+        src = f.read()
+    imports = [ln for ln in src.splitlines()
+               if ln.lstrip().startswith(("import ", "from "))]
+    for ln in imports:
+        assert "core.fusion" not in ln, ln
+        assert "core import fusion" not in ln, ln
+        assert "costmodel.evaluator" not in ln, ln
+        assert "costmodel import evaluator" not in ln, ln
+
+
+def test_spacemap_boundary_pin_survives_a_clean_interpreter():
+    """`repro analyze` must work where only the analysis surface is
+    imported: a fresh interpreter builds a spacemap and re-derives the
+    same summary the in-process analyzer produced."""
+    code = (
+        "import json, sys\n"
+        "from repro.analysis.spacemap import build_spacemap\n"
+        "from repro.search.registry import build_workload\n"
+        "sm = build_spacemap(build_workload('vgg16'), 'default', 'simba')\n"
+        "json.dump(sm.summary(), sys.stdout)\n")
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src)
+    out = subprocess.run([sys.executable, "-c", code], check=True, env=env,
+                         capture_output=True, text=True)
+    import json
+    from repro.search.registry import build_workload
+    expect = build_spacemap(build_workload("vgg16"), "default",
+                            "simba").summary()
+    assert json.loads(out.stdout) == expect
