@@ -1,5 +1,11 @@
 """Shared benchmark helpers: timing, CSV row emission, and machine-readable
-JSON records (``benchmarks/run.py --json``)."""
+JSON records (``benchmarks/run.py --json``).
+
+Numeric record fields are mirrored into a :class:`repro.obs.MetricRegistry`
+as ``<record>.<field>`` gauges, and the registry snapshot rides along in
+the JSON payload (``metrics`` key) — the same rollup shape ``repro trace``
+aggregates, so bench output and trace output diff with the same tooling.
+"""
 from __future__ import annotations
 
 import json
@@ -9,8 +15,11 @@ import sys
 import time
 from typing import Callable, Dict, List, Tuple
 
+from repro.obs import MetricRegistry
+
 ROWS: List[Tuple[str, float, str]] = []
 RECORDS: List[Dict] = []        # structured metrics for the JSON report
+REGISTRY = MetricRegistry()     # gauge mirror of every numeric record field
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
@@ -22,6 +31,10 @@ def record(name: str, **fields):
     """Emit a structured metric record (kept alongside the CSV rows so perf
     trajectories can be diffed against ``BENCH_*.json`` baselines)."""
     RECORDS.append({"name": name, **fields})
+    for k, v in fields.items():
+        # bools are ints in Python; keep flags out of the numeric gauges
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            REGISTRY.gauge(f"{name}.{k}").set(float(v))
 
 
 def dump_json(path: str) -> None:
@@ -37,6 +50,7 @@ def dump_json(path: str) -> None:
         "rows": [{"name": n, "us_per_call": us, "derived": d}
                  for n, us, d in ROWS],
         "records": RECORDS,
+        "metrics": REGISTRY.snapshot(),
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)

@@ -16,6 +16,12 @@ metrics.  ``--max-regression`` defaults to 0.30 — wide enough to absorb
 normal machine-to-machine and run-to-run noise while still catching the
 step-function slowdowns an accidental O(n^2) or a dropped cache causes.
 Override per-environment with ``BENCH_MAX_REGRESSION``.
+
+Secondary warn-only metrics (default: ``ga_convergence:group_hit_rate``,
+the GA's cache effectiveness) are compared with the same window but never
+fail the run — they print, and regressions go to stderr as warnings.
+Repeat ``--warn-metric`` to adjust the set; ``--warn-metric none``
+disables it.
 """
 from __future__ import annotations
 
@@ -84,7 +90,17 @@ def main(argv: Optional[list] = None) -> int:
     ap.add_argument("--lower-is-better", action="store_true",
                     help="treat increases as regressions (time-like "
                          "metrics)")
+    ap.add_argument("--warn-metric", action="append", default=None,
+                    metavar="RECORD:FIELD",
+                    help="additional record_name:field metrics compared "
+                         "warn-only — a regression prints a warning but "
+                         "never fails the run (default: "
+                         "ga_convergence:group_hit_rate; pass 'none' to "
+                         "disable)")
     args = ap.parse_args(argv)
+    warn_metrics = args.warn_metric \
+        if args.warn_metric is not None else ["ga_convergence:group_hit_rate"]
+    warn_metrics = [m for m in warn_metrics if m.lower() != "none"]
 
     try:
         res = compare(args.baseline, args.current, metric=args.metric,
@@ -99,6 +115,25 @@ def main(argv: Optional[list] = None) -> int:
           f"current={res['current']:.1f} "
           f"({direction}{res['change_frac'] * 100:.1f}%, "
           f"allowed regression {res['max_regression'] * 100:.0f}%)")
+    # secondary metrics: same window, zero teeth — absent/zero baselines
+    # (older BENCH_*.json without the field) degrade to a note, and a
+    # regression warns without touching the exit code
+    for wm in warn_metrics:
+        try:
+            wres = compare(args.baseline, args.current, metric=wm,
+                           max_regression=args.max_regression,
+                           lower_is_better=args.lower_is_better)
+        except (OSError, KeyError, ValueError, json.JSONDecodeError) as e:
+            print(f"{wm}: unavailable ({e}) (warn-only)")
+            continue
+        wdir = "+" if wres["change_frac"] >= 0 else ""
+        print(f"{wm}: baseline={wres['baseline']:.4f} "
+              f"current={wres['current']:.4f} "
+              f"({wdir}{wres['change_frac'] * 100:.1f}%) (warn-only)")
+        if not wres["ok"]:
+            print(f"warning: {wm} regressed beyond the window — not "
+                  f"failing the run (warn-only metric), but worth a look",
+                  file=sys.stderr)
     if not res["ok"]:
         print("PERF REGRESSION: metric fell beyond the allowed window "
               "(rerun to rule out noise; if the slowdown is real, fix it "

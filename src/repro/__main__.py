@@ -9,6 +9,7 @@ registries, export workload IR.
     repro report artifact.json [--schedule] [--history]
     repro verify artifact.json | repro verify --store schedules/
     repro analyze mobilenet_v3 --accel simba [--json]
+    repro trace trace.jsonl [--top 10] [--json]
     repro lint [paths...]
     repro export --workload mobilenet_v3@hw=160 --out model.json
     repro list [--json] [--store schedules/]
@@ -67,6 +68,11 @@ def _add_spec_args(p) -> None:
                         "factorize the space into regions before searching "
                         "(repro analyze shows the map; exhaustive then "
                         "enumerates per region)")
+    p.add_argument("--telemetry", action="store_true",
+                   help="record per-generation convergence telemetry and "
+                        "embed the summary in the artifact (repro report "
+                        "--telemetry renders it); never changes the search "
+                        "result")
 
 
 def _spec_from_args(args):
@@ -84,7 +90,7 @@ def _spec_from_args(args):
         costmodel=args.costmodel, backend_config=backend_config,
         workload_kwargs=json.loads(args.workload_kwargs),
         seed=args.seed, budget=args.budget, patience=args.patience,
-        spacemap=args.spacemap)
+        spacemap=args.spacemap, telemetry=args.telemetry)
 
 
 def _add_search_parser(sub) -> None:
@@ -99,6 +105,10 @@ def _add_search_parser(sub) -> None:
                    help="embed the workload's GraphIR in the artifact "
                         "(self-contained report/rebind; automatic for "
                         "file: workloads)")
+    p.add_argument("--trace", default=None, metavar="TRACE_JSONL",
+                   help="stream span events to this JSONL file (implies "
+                        "--telemetry; inspect with `repro trace`; "
+                        "REPRO_TRACE=path is the env equivalent)")
 
 
 def _add_export_parser(sub) -> None:
@@ -154,6 +164,10 @@ def _add_report_parser(sub) -> None:
                         "(a top-10 view prints by default)")
     p.add_argument("--history", action="store_true",
                    help="print the convergence history trace")
+    p.add_argument("--telemetry", action="store_true",
+                   help="render the embedded telemetry summary "
+                        "(convergence curve + cache stats; requires a "
+                        "search run with --telemetry/--trace)")
     p.add_argument("--json", action="store_true",
                    help="emit the summary as JSON")
 
@@ -198,6 +212,20 @@ def _add_analyze_parser(sub) -> None:
                         "summary) as JSON")
 
 
+def _add_trace_parser(sub) -> None:
+    p = sub.add_parser(
+        "trace", help="aggregate a telemetry JSONL trace: validate every "
+                      "event against the schema, render the span tree, "
+                      "top-k slowest spans, and metric rollups "
+                      "(repro.obs.traceview)")
+    p.add_argument("trace", metavar="TRACE_JSONL",
+                   help="trace file written via --trace / REPRO_TRACE")
+    p.add_argument("--top", type=int, default=10,
+                   help="slowest spans to list (default 10)")
+    p.add_argument("--json", action="store_true",
+                   help="emit the aggregate as JSON")
+
+
 def _add_lint_parser(sub) -> None:
     p = sub.add_parser(
         "lint", help="determinism + import-boundary lint over the engine "
@@ -212,6 +240,14 @@ def _add_lint_parser(sub) -> None:
                         "and src/ (default: .)")
     p.add_argument("--json", action="store_true",
                    help="emit findings as JSON")
+
+
+def _env_collector():
+    """A TelemetryCollector streaming to ``$REPRO_TRACE``, or None when the
+    env var is unset — the CLI's obs hook for verify/serve paths (searches
+    build their own collector inside SearchSession)."""
+    from repro.obs import TelemetryCollector
+    return TelemetryCollector.from_env()
 
 
 def _summary_line(artifact) -> str:
@@ -235,11 +271,15 @@ def _cmd_search(args) -> int:
             print(f"  step {p.step:>5}  best {p.best_fitness:.4f}  "
                   f"evals {p.evaluations}", file=sys.stderr)
 
-    session = SearchSession(spec, embed_ir=True if args.embed_ir else None)
+    session = SearchSession(spec, embed_ir=True if args.embed_ir else None,
+                            trace_path=args.trace)
     artifact = session.run(progress=progress if every else None)
     artifact.save(args.out)
     print(_summary_line(artifact))
     print(f"wrote {args.out}")
+    if args.trace:
+        print(f"trace: {args.trace} (inspect with `repro trace "
+              f"{args.trace}`)")
     return 0
 
 
@@ -247,9 +287,14 @@ def _cmd_submit(args) -> int:
     from repro.serve import ArtifactStore, BatchScheduler
 
     store = ArtifactStore(args.store)
-    sched = BatchScheduler(store, workers=1)
-    sched.submit(_spec_from_args(args))
-    job = sched.run().jobs[0]
+    col = _env_collector()
+    try:
+        sched = BatchScheduler(store, workers=1, obs=col)
+        sched.submit(_spec_from_args(args))
+        job = sched.run().jobs[0]
+    finally:
+        if col is not None:
+            col.close()
     if job.status == "failed":
         print(f"error: {job.error}", file=sys.stderr)
         return 2
@@ -268,12 +313,17 @@ def _cmd_serve(args) -> int:
     from repro.serve.scheduler import load_requests
 
     store = ArtifactStore(args.store)
-    sched = BatchScheduler(store, workers=args.workers)
-    for spec in load_requests(args.requests):
-        sched.submit(spec)
-    quiet = args.json
-    outcome = sched.run(
-        progress=None if quiet else lambda job: print(job.describe()))
+    col = _env_collector()
+    try:
+        sched = BatchScheduler(store, workers=args.workers, obs=col)
+        for spec in load_requests(args.requests):
+            sched.submit(spec)
+        quiet = args.json
+        outcome = sched.run(
+            progress=None if quiet else lambda job: print(job.describe()))
+    finally:
+        if col is not None:
+            col.close()
     if args.json:
         print(json.dumps(outcome.to_dict(), indent=2, sort_keys=True))
     else:
@@ -292,6 +342,11 @@ def _cmd_report(args) -> int:
     artifact = ScheduleArtifact.load(args.artifact)
     for w in artifact.load_warnings:
         print(f"warning: {w}", file=sys.stderr)
+    if args.telemetry and artifact.telemetry is None:
+        print("error: artifact carries no telemetry summary — re-run the "
+              "search with --telemetry (or --trace / REPRO_TRACE)",
+              file=sys.stderr)
+        return 2
     s = artifact.summary()
     # independent re-verification + Chen-et-al lower-bound certificate
     # (repro.analysis): static, no re-search
@@ -300,6 +355,8 @@ def _cmd_report(args) -> int:
     if args.json:
         s["verified"] = report.ok
         s["certificate"] = cert.to_dict() if cert else None
+        if args.telemetry:
+            s["telemetry"] = artifact.telemetry
         print(json.dumps(s, indent=2, sort_keys=True))
     else:
         print(f"workload     : {s['workload']} "
@@ -323,6 +380,10 @@ def _cmd_report(args) -> int:
         verdict = "all checks passed" if report.ok else \
             "FAILED " + ", ".join(c.name for c in report.failures())
         print(f"verification : {verdict} (repro verify for detail)")
+        if args.telemetry:
+            from repro.obs.report import render_telemetry
+            print()
+            print(render_telemetry(artifact.telemetry))
     if not args.json:
         from repro.core.report import breakdown_report
         print()
@@ -370,13 +431,18 @@ def _cmd_verify(args) -> int:
               file=sys.stderr)
         return 2
     results = []                      # (label, load_warnings, report)
-    for path in args.artifacts:
-        artifact = ScheduleArtifact.load(path)
-        results.append((path, list(artifact.load_warnings),
-                        verify_artifact(artifact)))
-    if args.store:
-        for key, report in verify_store(args.store):
-            results.append((f"{args.store}:{key[:12]}", [], report))
+    col = _env_collector()
+    try:
+        for path in args.artifacts:
+            artifact = ScheduleArtifact.load(path)
+            results.append((path, list(artifact.load_warnings),
+                            verify_artifact(artifact, obs=col)))
+        if args.store:
+            for key, report in verify_store(args.store, obs=col):
+                results.append((f"{args.store}:{key[:12]}", [], report))
+    finally:
+        if col is not None:
+            col.close()
     all_ok = all(r.ok for _, _, r in results)
     if args.json:
         print(json.dumps({
@@ -408,6 +474,17 @@ def _cmd_analyze(args) -> int:
         return 0
     print(sm.describe())
     return 0
+
+
+def _cmd_trace(args) -> int:
+    from repro.obs.traceview import read_trace
+
+    rep = read_trace(args.trace, top=args.top)
+    if args.json:
+        print(json.dumps(rep.to_dict(), indent=2, sort_keys=True))
+    else:
+        print(rep.describe())
+    return 0 if rep.valid else 1
 
 
 def _cmd_lint(args) -> int:
@@ -543,6 +620,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     _add_report_parser(sub)
     _add_verify_parser(sub)
     _add_analyze_parser(sub)
+    _add_trace_parser(sub)
     _add_lint_parser(sub)
     _add_export_parser(sub)
     lp = sub.add_parser(
@@ -563,8 +641,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     handler = {"search": _cmd_search, "submit": _cmd_submit,
                "serve": _cmd_serve, "report": _cmd_report,
                "verify": _cmd_verify, "analyze": _cmd_analyze,
-               "lint": _cmd_lint, "export": _cmd_export,
-               "list": _cmd_list}[args.command]
+               "trace": _cmd_trace, "lint": _cmd_lint,
+               "export": _cmd_export, "list": _cmd_list}[args.command]
     try:
         return handler(args)
     except BrokenPipeError:

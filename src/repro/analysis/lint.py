@@ -43,6 +43,20 @@ the four ways nondeterminism historically sneaks into systems like this:
     not be able to hide its own evidence.  Boundary files are checked on
     *every* lint run, whatever paths were passed; a table row naming a
     missing file is itself a finding, so the table cannot rot.
+``clock-seam``
+    Instrumented modules must take *every* clock reading — wall or
+    monotonic — through :mod:`repro.obs.clock`, the engine's single
+    audited time seam, declared as a ``pyproject.toml`` path list::
+
+        [tool.repro.lint.clock_seam]
+        paths = ["src/repro/search/session.py", ...]
+
+    Any direct ``time.*`` / ``datetime.*`` call (or ``from time import
+    ...``) in a listed file is a finding — stricter than ``wall-clock``,
+    which permits monotonic timers: telemetry timestamps that bypass the
+    seam fragment the determinism audit across call sites.  Like the
+    boundary table, listed files are checked on every run and a row
+    naming a missing file is itself a finding.
 
 Findings are suppressed only through the allowlist in ``pyproject.toml``:
 
@@ -70,10 +84,11 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 #: packages linted by default (relative to ``<root>/src/repro``)
-DEFAULT_PACKAGES = ("core", "search", "serve", "costmodel", "ir", "hw")
+DEFAULT_PACKAGES = ("core", "search", "serve", "costmodel", "ir", "hw",
+                    "obs")
 
 RULES = ("global-random", "wall-clock", "unordered-iter", "mutable-default",
-         "import-boundary")
+         "import-boundary", "clock-seam")
 
 #: RNG *constructors*: owning a seeded generator is the sanctioned pattern
 _RNG_CONSTRUCTORS = {"Random", "SystemRandom", "default_rng", "Generator",
@@ -182,6 +197,104 @@ def load_pyproject_boundaries(pyproject_path: str) -> Dict[str, List[str]]:
                              re.finditer(r'"((?:[^"\\]|\\.)*)"',
                                          row.group(2))]
     return out
+
+
+def load_pyproject_clock_seam(pyproject_path: str) -> List[str]:
+    """The ``[tool.repro.lint.clock_seam] paths`` list — files whose every
+    clock reading must route through ``repro.obs.clock`` — read with the
+    same mini TOML reader as the allowlist."""
+    try:
+        with open(pyproject_path) as f:
+            text = f.read()
+    except FileNotFoundError:
+        return []
+    sec = re.search(
+        r"(?ms)^\[tool\.repro\.lint\.clock_seam\]\s*$(.*?)(?=^\[|\Z)", text)
+    if not sec:
+        return []
+    arr = re.search(r"(?ms)^paths\s*=\s*\[(.*?)\]", sec.group(1))
+    if not arr:
+        return []
+    return [m.group(1) for m in
+            re.finditer(r'"((?:[^"\\]|\\.)*)"', arr.group(1))]
+
+
+def check_clock_seam(root: str, seam_paths: Sequence[str]) -> List[Finding]:
+    """Enforce the clock-seam table: in a listed file, every ``time.*`` /
+    ``datetime.*`` call — monotonic timers included — and every ``from
+    time import ...`` binding is a finding; time flows only through
+    :mod:`repro.obs.clock`.  Like the boundary table, a row naming a
+    missing file is itself a finding."""
+    findings: List[Finding] = []
+    for rel in sorted(seam_paths):
+        full = os.path.join(root, rel)
+        shown = rel.replace(os.sep, "/")
+        if not os.path.isfile(full):
+            findings.append(Finding(
+                "pyproject.toml", 0, "clock-seam", rel,
+                f"clock_seam table names {rel!r} but no such file exists "
+                f"under the root — fix the path or delete the row"))
+            continue
+        with open(full) as f:
+            source = f.read()
+        try:
+            tree = ast.parse(source, filename=full)
+        except SyntaxError as e:
+            findings.append(Finding(
+                shown, e.lineno or 0, "parse-error", "syntax",
+                f"file does not parse: {e.msg}"))
+            continue
+        # pass 1: names this file binds to the time/datetime modules (or
+        # the datetime/date classes); `from time import X` is flagged at
+        # the import itself — the binding bypasses the seam however it is
+        # later called
+        time_mods: Set[str] = set()
+        dt_mods: Set[str] = set()
+        dt_classes: Set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    bound = alias.asname or alias.name.split(".", 1)[0]
+                    if alias.name == "time":
+                        time_mods.add(bound)
+                    elif alias.name == "datetime":
+                        dt_mods.add(bound)
+            elif isinstance(node, ast.ImportFrom) and not node.level:
+                if node.module == "time":
+                    for alias in node.names:
+                        findings.append(Finding(
+                            shown, node.lineno, "clock-seam",
+                            f"time.{alias.name}",
+                            f"'from time import {alias.name}' bypasses "
+                            f"the repro.obs.clock seam — call "
+                            f"clock.now()/clock.perf_counter()/"
+                            f"clock.unix_time() instead"))
+                elif node.module == "datetime":
+                    for alias in node.names:
+                        if alias.name in ("datetime", "date"):
+                            dt_classes.add(alias.asname or alias.name)
+        # pass 2: every call through those bindings is a seam bypass
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            parts = _dotted(node.func)
+            if not parts:
+                continue
+            head, last = parts[0], parts[-1]
+            if head in time_mods and len(parts) == 2:
+                findings.append(Finding(
+                    shown, node.lineno, "clock-seam", f"time.{last}",
+                    f"{'.'.join(parts)}() bypasses the repro.obs.clock "
+                    f"seam (monotonic timers included — telemetry "
+                    f"timestamps must share one audited source)"))
+            elif (head in dt_classes and len(parts) == 2) or \
+                    (head in dt_mods and len(parts) == 3
+                     and parts[1] in ("datetime", "date")):
+                findings.append(Finding(
+                    shown, node.lineno, "clock-seam", f"datetime.{last}",
+                    f"{'.'.join(parts)}() bypasses the repro.obs.clock "
+                    f"seam — route wall-time reads through clock.*"))
+    return findings
 
 
 def check_boundaries(root: str, boundaries: Dict[str, Sequence[str]]
@@ -441,20 +554,23 @@ def _default_paths(root: str) -> List[str]:
 
 def run_lint(root: str = ".", paths: Optional[Sequence[str]] = None,
              allow_raw: Optional[Sequence[str]] = None,
-             boundaries: Optional[Dict[str, Sequence[str]]] = None
+             boundaries: Optional[Dict[str, Sequence[str]]] = None,
+             clock_seam: Optional[Sequence[str]] = None
              ) -> List[Finding]:
     """Lint ``paths`` (default: the engine packages under ``root``),
-    enforce the import-boundary table (default: the
-    ``[tool.repro.lint.boundaries]`` table — checked on *every* run,
-    whatever ``paths`` say), apply the allowlist (default:
-    ``<root>/pyproject.toml``), and return surviving findings — including
-    ``bad-allow``/``stale-allow`` rows for a defective allowlist — sorted
-    by location."""
+    enforce the import-boundary and clock-seam tables (defaults: the
+    ``[tool.repro.lint.boundaries]`` / ``[tool.repro.lint.clock_seam]``
+    tables — checked on *every* run, whatever ``paths`` say), apply the
+    allowlist (default: ``<root>/pyproject.toml``), and return surviving
+    findings — including ``bad-allow``/``stale-allow`` rows for a
+    defective allowlist — sorted by location."""
     pyproject = os.path.join(root, "pyproject.toml")
     if allow_raw is None:
         allow_raw = load_pyproject_allow(pyproject)
     if boundaries is None:
         boundaries = load_pyproject_boundaries(pyproject)
+    if clock_seam is None:
+        clock_seam = load_pyproject_clock_seam(pyproject)
     entries, findings = parse_allow_entries(allow_raw)
 
     files: List[Tuple[str, str]] = []
@@ -473,6 +589,7 @@ def run_lint(root: str = ".", paths: Optional[Sequence[str]] = None,
     for full, rel in files:
         raw_findings.extend(lint_file(full, rel.replace(os.sep, "/")))
     raw_findings.extend(check_boundaries(root, boundaries))
+    raw_findings.extend(check_clock_seam(root, clock_seam))
 
     used: Set[str] = set()
     for f in raw_findings:

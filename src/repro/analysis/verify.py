@@ -499,11 +499,16 @@ def _check_spacemap(artifact: "ScheduleArtifact", graph: LayerGraph,
 
 
 def verify_artifact(artifact: "ScheduleArtifact", *,
-                    expect_key: Optional[str] = None
+                    expect_key: Optional[str] = None,
+                    obs: Optional[Any] = None
                     ) -> VerificationReport:
     """Re-derive and re-check every claim a :class:`ScheduleArtifact`
     makes (see module docstring for the check list).  ``expect_key``
-    additionally pins the artifact to a store object's content address."""
+    additionally pins the artifact to a store object's content address.
+    ``obs`` (duck-typed: anything with ``record_certificate``, e.g. a
+    :class:`repro.obs.TelemetryCollector`) receives the traffic certificate
+    when one is derived — kept duck-typed so this module's import boundary
+    (engine-free) needs no new pins."""
     report = VerificationReport()
     checks = report.checks
 
@@ -627,10 +632,13 @@ def verify_artifact(artifact: "ScheduleArtifact", *,
         f"claimed DRAM traffic {traffic} words is BELOW the provable "
         f"lower bound (schedule LB {sched_lb}, graph LB {g_lb.words}) — "
         f"the reported cost is deflated or the genome was altered"))
+    if obs is not None:
+        obs.record_certificate(artifact.graph_fingerprint, cert, report.ok)
     return report
 
 
-def verify_store(root: str) -> List[Tuple[str, VerificationReport]]:
+def verify_store(root: str, *, obs: Optional[Any] = None
+                 ) -> List[Tuple[str, VerificationReport]]:
     """Verify every object in an :class:`~repro.serve.store.ArtifactStore`
     against its own content address.  Unreadable objects yield a report
     whose single failed ``store-object`` check carries the load error."""
@@ -646,5 +654,5 @@ def verify_store(root: str) -> List[Tuple[str, VerificationReport]]:
             continue
         if artifact is None:               # raced with a concurrent delete
             continue
-        out.append((key, verify_artifact(artifact, expect_key=key)))
+        out.append((key, verify_artifact(artifact, expect_key=key, obs=obs)))
     return out

@@ -67,10 +67,11 @@ edge because no genome ever fuses one.
 from __future__ import annotations
 
 import os
-import time
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
+
+from repro.obs import clock
 
 _MISSING = object()
 
@@ -226,9 +227,9 @@ class PopulationEvaluator:
     def fitness_masks(self, masks: Sequence[int], objective: str = "edp"
                       ) -> np.ndarray:
         """Fitness per genome mask (float64 array), canonical order."""
-        t0 = time.perf_counter()
+        t0 = clock.perf_counter()
         out = self._fitness_masks(masks, objective)
-        self.batch_time += time.perf_counter() - t0
+        self.batch_time += clock.perf_counter() - t0
         self.batches += 1
         self.states_scored += len(masks)
         return out

@@ -52,6 +52,7 @@ from repro.costmodel.base import (CostBreakdown, CostModel, GroupKey,
                                   GroupTotals)
 from repro.costmodel.default import DefaultCostModel
 from repro.costmodel.energy import DEFAULT_ENERGY, EnergyModel
+from repro.obs import clock
 
 try:                                     # numpy-backed population engine
     from repro.core.population import (MIN_BATCH, PopulationEvaluator,
@@ -171,6 +172,18 @@ class Evaluator:
         self._layerwise: Optional[ScheduleCost] = None
         self._pop: Optional["PopulationEvaluator"] = None
         self._pop_mode = engine_mode() if _HAVE_POP else "off"
+        # telemetry collector (repro.obs) or None; checked once per *batch*
+        # and once per group-cache miss — never per offspring — so the
+        # disabled path costs one attribute load
+        self._obs = None
+
+    def attach_telemetry(self, collector) -> None:
+        """Attach a :class:`repro.obs.TelemetryCollector` (None detaches).
+        Purely observational: fitness values, cache contents, and counter
+        semantics are unchanged whether or not one is attached."""
+        self._obs = collector
+        if collector is not None:
+            collector.bind_evaluator(self)
 
     # ---- public API ----------------------------------------------------------------
     def layerwise(self) -> ScheduleCost:
@@ -221,6 +234,10 @@ class Evaluator:
                 uniq[k] = 0.0
                 todo.append(s)
         self.batch_unique += len(uniq)
+        obs = self._obs
+        if obs is not None:
+            t0w, t0p = clock.now(), clock.perf_counter()
+            m0 = self.group_misses
         if (self._pop_mode != "off" and len(todo) >= MIN_BATCH
                 and objective in NATIVE_OBJECTIVES
                 and todo[0].cg is self.cg):
@@ -228,10 +245,17 @@ class Evaluator:
                 [s.mask for s in todo], objective)
             for s, f in zip(todo, fits.tolist()):
                 uniq[s.mask] = f
+            engine = self._pop.backend
         else:
             for s in todo:
                 uniq[s.key()] = self._fitness_fast(s, objective)
-        return [uniq[k] for k in keys]
+            engine = "scalar"
+        out = [uniq[k] for k in keys]
+        if obs is not None:
+            obs.record_batch(len(states), len(todo), out, engine, t0w,
+                             clock.perf_counter() - t0p,
+                             self.group_misses - m0)
+        return out
 
     def fitness_batch_unique(self, states: Sequence[FusionState],
                              objective: str = "edp") -> List[float]:
@@ -241,12 +265,24 @@ class Evaluator:
         routing, bit-identical results."""
         self.batch_states += len(states)
         self.batch_unique += len(states)
+        obs = self._obs
+        if obs is not None:
+            t0w, t0p = clock.now(), clock.perf_counter()
+            m0 = self.group_misses
         if (self._pop_mode != "off" and len(states) >= MIN_BATCH
                 and objective in NATIVE_OBJECTIVES
                 and states[0].cg is self.cg):
-            return self.population().fitness_masks(
+            out = self.population().fitness_masks(
                 [s.mask for s in states], objective).tolist()
-        return [self._fitness_fast(s, objective) for s in states]
+            engine = self._pop.backend
+        else:
+            out = [self._fitness_fast(s, objective) for s in states]
+            engine = "scalar"
+        if obs is not None:
+            obs.record_batch(len(states), len(states), out, engine, t0w,
+                             clock.perf_counter() - t0p,
+                             self.group_misses - m0)
+        return out
 
     def population(self, backend: Optional[str] = None
                    ) -> "PopulationEvaluator":
@@ -336,7 +372,13 @@ class Evaluator:
     def _group_cost(self, key: GroupKey) -> GroupCost:
         cached = self._group_cache.get(key, _MISSING)
         if cached is _MISSING:
-            bd = self.costmodel.cost_group(key)
+            obs = self._obs
+            if obs is None:
+                bd = self.costmodel.cost_group(key)
+            else:                    # time novel-group costing (miss path
+                t0 = clock.perf_counter()   # only: hits never pay this)
+                bd = self.costmodel.cost_group(key)
+                obs.note_group_costed(clock.perf_counter() - t0)
             cached = None if bd is None else bd.totals()
             self._group_cache[key] = cached
             self.group_misses += 1

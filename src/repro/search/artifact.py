@@ -13,9 +13,10 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
+
+from repro.obs import clock
 
 from repro.core.fusion import FusionState
 from repro.core.graph import LayerGraph
@@ -95,6 +96,12 @@ class ScheduleArtifact(ImprovementRatios):
     #: ``repro verify`` re-derives independently and compares
     #: (:meth:`repro.analysis.spacemap.SpaceMap.summary`)
     spacemap: Optional[Dict[str, Any]] = None
+    #: compact search-telemetry summary (``SearchSpec(telemetry=True)`` or
+    #: traced runs): convergence curve, rejection / cache-hit rates per
+    #: generation, final metric snapshot — what ``repro report
+    #: --telemetry`` renders without the raw trace
+    #: (:meth:`repro.obs.collect.TelemetryCollector.summary`)
+    telemetry: Optional[Dict[str, Any]] = None
     created_unix: int = 0
     version: int = ARTIFACT_VERSION
     #: non-fatal schema degradations seen while loading (pre-cost-breakdown
@@ -182,6 +189,8 @@ class ScheduleArtifact(ImprovementRatios):
             d["graph_ir"] = self.graph_ir
         if self.spacemap is not None:     # only spacemap=True searches
             d["spacemap"] = self.spacemap
+        if self.telemetry is not None:    # only telemetry-enabled searches
+            d["telemetry"] = self.telemetry
         return d
 
     @classmethod
@@ -236,6 +245,7 @@ class ScheduleArtifact(ImprovementRatios):
             group_breakdowns=breakdowns,
             graph_ir=d.get("graph_ir"),
             spacemap=d.get("spacemap"),
+            telemetry=d.get("telemetry"),
             created_unix=d.get("created_unix", 0),
             load_warnings=warnings,
         )
@@ -263,7 +273,8 @@ def make_artifact(spec: SearchSpec, graph: LayerGraph, result,
                   backend_stats: Optional[Dict[str, Any]] = None,
                   group_breakdowns: Optional[List[CostBreakdown]] = None,
                   embed_ir: bool = False,
-                  spacemap: Optional[Dict[str, Any]] = None
+                  spacemap: Optional[Dict[str, Any]] = None,
+                  telemetry: Optional[Dict[str, Any]] = None
                   ) -> ScheduleArtifact:
     """Package a finished backend run (``result``: GAResult over fusion
     genomes) into a durable artifact.  ``embed_ir`` snapshots the graph's
@@ -287,5 +298,6 @@ def make_artifact(spec: SearchSpec, graph: LayerGraph, result,
         group_breakdowns=list(group_breakdowns or []),
         graph_ir=graph.to_ir().to_dict() if embed_ir else None,
         spacemap=spacemap,
-        created_unix=int(time.time()),
+        telemetry=telemetry,
+        created_unix=clock.unix_time(),
     )

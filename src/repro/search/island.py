@@ -301,6 +301,9 @@ class IslandBackend(SearchBackend):
     def _drive(problem, chans, sync_gens, migrate_every, observer
                ) -> GAResult:
         n = len(chans)
+        # telemetry collector the session attached (repro.obs), or None;
+        # records barriers/migrations only — never feeds the stop decision
+        col = getattr(problem, "obs", None)
 
         def recv_all(expect: str):
             msgs = []
@@ -328,6 +331,8 @@ class IslandBackend(SearchBackend):
                                                     offspring):
                     stopped = True
                 migration = (gen + 1) % migrate_every == 0
+                if col is not None:
+                    col.record_migration(gen, best, n, migration)
                 for i, chan in enumerate(chans):
                     # ring: island i receives island (i-1)'s elites; at
                     # observation-only syncs nothing migrates

@@ -12,14 +12,15 @@ so individual backends stay oblivious to stopping policy.
 """
 from __future__ import annotations
 
-import time
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional, Tuple
 
 from repro.core.graph import LayerGraph
 from repro.core.problem import FusionProblem
 from repro.costmodel.accelerator import Accelerator
 from repro.costmodel.energy import DEFAULT_ENERGY, EnergyModel
 from repro.costmodel.evaluator import NATIVE_OBJECTIVES, Evaluator
+from repro.obs import (TelemetryCollector, Tracer, clock,
+                       trace_path_from_env)
 
 from repro.search.artifact import ScheduleArtifact, make_artifact
 from repro.search.backends import BackendError
@@ -65,8 +66,13 @@ class SearchSession:
     def __init__(self, spec: SearchSpec, *, graph: Optional[LayerGraph] = None,
                  accelerator: Optional[Accelerator] = None,
                  em: Optional[EnergyModel] = None,
-                 embed_ir: Optional[bool] = None):
+                 embed_ir: Optional[bool] = None,
+                 trace_path: Optional[str] = None):
         self.spec = spec
+        # JSONL span destination (CLI --trace); REPRO_TRACE is the env
+        # fallback, checked at run() so tests can set it per-run
+        self.trace_path = trace_path
+        self.telemetry: Optional[TelemetryCollector] = None
         # artifacts for workloads with no registry entry (file: documents,
         # direct graphs recorded as ir:<fingerprint>) embed the canonical
         # GraphIR so they stay reproducible anywhere; registry workloads
@@ -136,12 +142,41 @@ class SearchSession:
         return cls(spec, graph=graph, accelerator=accelerator, em=em)
 
     # ---- running ---------------------------------------------------------------
-    def _observer(self, progress: Optional[Callable[[Progress], None]]):
+    def _telemetry_setup(self) -> Tuple[Optional[TelemetryCollector],
+                                        Optional[Tracer]]:
+        """Build and attach the collector when telemetry is on; (None, None)
+        otherwise — the disabled path allocates nothing."""
+        path = self.trace_path or trace_path_from_env()
+        if not (self.spec.telemetry or path):
+            return None, None
+        tracer = Tracer(path) if path else None
+        collector = TelemetryCollector(tracer=tracer)
+        self.evaluator.attach_telemetry(collector)
+        # island workers reach the collector via the problem they fork with
+        self.problem.obs = collector
+        collector.begin_search({
+            "workload": self.spec.workload,
+            "accelerator": self.spec.accelerator,
+            "objective": self.spec.objective,
+            "backend": self.spec.backend,
+            "costmodel": self.spec.costmodel,
+            "seed": self.spec.seed,
+        })
+        self.telemetry = collector
+        return collector, tracer
+
+    def _observer(self, progress: Optional[Callable[[Progress], None]],
+                  collector: Optional[TelemetryCollector] = None):
         spec = self.spec
         state = {"best": -1.0, "stale": 0}
 
         def observe(step: int, best: float, evals: int, offspring: int
                     ) -> bool:
+            # telemetry ticks first so a progress callback already sees the
+            # generation's record; it only records — the stop decision below
+            # never reads it, so budget/patience behave identically on/off
+            if collector is not None:
+                collector.on_step(step, best, evals, offspring)
             if progress is not None:
                 progress(Progress(step, best, evals, offspring))
             stop = False
@@ -161,21 +196,38 @@ class SearchSession:
     def run(self, progress: Optional[Callable[[Progress], None]] = None
             ) -> ScheduleArtifact:
         """Drive the backend to completion and package the artifact."""
-        t0 = time.perf_counter()
-        self.result = self.backend.run(
-            self.problem, seed=self.spec.seed,
-            observer=self._observer(progress), **self.spec.backend_config)
-        wall_s = time.perf_counter() - t0
+        collector, tracer = self._telemetry_setup()
+        t0 = clock.perf_counter()
+        try:
+            self.result = self.backend.run(
+                self.problem, seed=self.spec.seed,
+                observer=self._observer(progress, collector),
+                **self.spec.backend_config)
+        finally:
+            # detach even on failure so the evaluator/problem never leak a
+            # collector into a later run on the same session objects
+            if collector is not None:
+                self.evaluator.attach_telemetry(None)
+                self.problem.obs = None
+        wall_s = clock.perf_counter() - t0
         best_cost = self.evaluator.evaluate(self.result.best_state)
         assert best_cost is not None, \
             "backend returned an invalid best state"
         breakdowns = self.evaluator.breakdowns(self.result.best_state)
+        telemetry = None
+        if collector is not None:
+            stats = self.evaluator.cache_stats()
+            collector.end_search(stats)
+            if tracer is not None:
+                tracer.close()
+            telemetry = collector.summary(stats)
         self.artifact = make_artifact(
             self.spec, self.graph, self.result,
             baseline=self.evaluator.layerwise(), best=best_cost,
             wall_s=wall_s, backend_stats=self.evaluator.cache_stats(),
             group_breakdowns=breakdowns, embed_ir=self.embed_ir,
-            spacemap=self.spacemap.summary() if self.spacemap else None)
+            spacemap=self.spacemap.summary() if self.spacemap else None,
+            telemetry=telemetry)
         return self.artifact
 
     # ---- compatibility ----------------------------------------------------------
@@ -195,7 +247,7 @@ def search(workload: str, accelerator: str = "simba", *,
            objective: str = "edp", backend: str = "ga",
            costmodel: str = "default", seed: int = 0,
            budget: Optional[int] = None, patience: Optional[int] = None,
-           spacemap: bool = False,
+           spacemap: bool = False, telemetry: bool = False,
            backend_config: Optional[dict] = None,
            workload_kwargs: Optional[dict] = None,
            progress: Optional[Callable[[Progress], None]] = None
@@ -209,5 +261,5 @@ def search(workload: str, accelerator: str = "simba", *,
                       backend_config=backend_config or {},
                       workload_kwargs=workload_kwargs or {},
                       seed=seed, budget=budget, patience=patience,
-                      spacemap=spacemap)
+                      spacemap=spacemap, telemetry=telemetry)
     return SearchSession(spec).run(progress=progress)

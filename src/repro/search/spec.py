@@ -50,6 +50,14 @@ class SearchSpec:
     #: independent region.  Fixed-seed trajectories differ from
     #: ``spacemap=False`` runs (fewer RNG draws), hence opt-in.
     spacemap: bool = False
+    #: opt into search telemetry (:mod:`repro.obs`): per-generation
+    #: convergence records and an embedded artifact ``telemetry`` summary;
+    #: span events additionally stream to a JSONL file when ``--trace`` /
+    #: ``REPRO_TRACE`` names one.  Unlike ``spacemap`` this never changes
+    #: the search itself: winner mask, fitness, RNG draw sequence, and
+    #: store keys are bit-identical to ``telemetry=False`` (pinned by
+    #: ``tests/test_obs_search.py``).
+    telemetry: bool = False
 
     def __post_init__(self):
         # freeze the nested dicts against aliasing surprises: specs are
@@ -62,12 +70,13 @@ class SearchSpec:
     # ---- serialization --------------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
-        if not d["spacemap"]:
-            # default-off fields serialize only when set: the canonical
-            # spec JSON (and therefore every existing store content
-            # address, which hashes it) is unchanged for spacemap-less
-            # specs written by any earlier build
-            del d["spacemap"]
+        for flag in ("spacemap", "telemetry"):
+            if not d[flag]:
+                # default-off fields serialize only when set: the canonical
+                # spec JSON (and therefore every existing store content
+                # address, which hashes it) is unchanged for specs written
+                # by any earlier build
+                del d[flag]
         return d
 
     @classmethod

@@ -28,6 +28,7 @@ import json
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
+from repro.obs import clock
 from repro.search.artifact import ScheduleArtifact, graph_fingerprint
 from repro.search.registry import build_workload
 from repro.search.session import SearchSession
@@ -116,11 +117,16 @@ class BatchScheduler:
 
     ``workers``: search processes for cache misses (``<= 1`` = run misses
     inline in submission order — fully deterministic, no subprocesses).
+    ``obs``: an optional :class:`repro.obs.TelemetryCollector`; when set,
+    every drained job emits a ``serve.job`` event and the batch closes with
+    a ``serve.batch`` span plus store hit/miss counters.  Purely
+    observational — job resolution is identical with or without it.
     """
 
-    def __init__(self, store: ArtifactStore, *, workers: int = 1):
+    def __init__(self, store: ArtifactStore, *, workers: int = 1, obs=None):
         self.store = store
         self.workers = int(workers)
+        self.obs = obs
         self.jobs: List[Job] = []
         self.searches_run = 0
         self._inflight: Dict[str, Job] = {}      # spec hash -> primary job
@@ -143,6 +149,10 @@ class BatchScheduler:
             ) -> ServeOutcome:
         """Resolve every pending job: store hits served, unique misses
         searched (worker pool), duplicates attached to their primary."""
+        col = self.obs
+        if col is not None:
+            t0w, t0p = clock.now(), clock.perf_counter()
+        store_hits = store_misses = 0
         pending = [j for j in self.jobs if j.status == "pending"]
         primaries = [j for j in pending if not j.deduped]
         to_search: List[Job] = []
@@ -159,8 +169,10 @@ class BatchScheduler:
                 self._fail(job, f"{type(e).__name__}: {e}")
                 continue
             if hit is not None:
+                store_hits += 1
                 self._serve(job, hit, "cache_hit")
             else:
+                store_misses += 1
                 to_search.append(job)
         # second dedup level, by normalized store key: specs whose raw
         # hashes differ but that address the same object (the same IR
@@ -192,9 +204,15 @@ class BatchScheduler:
                 self._serve(job, primary.artifact, "cache_hit")
         for job in pending:
             self._inflight.pop(spec_hash(job.spec), None)
+            if col is not None:
+                col.record_job(job)
             if progress is not None:
                 progress(job)
-        return ServeOutcome(jobs=list(self.jobs), stats=self.stats())
+        stats = self.stats()
+        if col is not None:
+            col.record_serve_batch(stats, store_hits, store_misses, t0w,
+                                   clock.perf_counter() - t0p)
+        return ServeOutcome(jobs=list(self.jobs), stats=stats)
 
     def _run_searches(self, jobs: List[Job],
                       fingerprints: Dict[int, str]) -> None:

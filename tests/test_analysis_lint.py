@@ -3,9 +3,11 @@ semantics (match / stale / malformed), the pyproject mini-parser, and the
 gate the CI job runs — src/repro is clean under the repo allowlist."""
 import textwrap
 
-from repro.analysis.lint import (RULES, check_boundaries, lint_file,
+from repro.analysis.lint import (RULES, check_boundaries,
+                                 check_clock_seam, lint_file,
                                  load_pyproject_allow,
                                  load_pyproject_boundaries,
+                                 load_pyproject_clock_seam,
                                  parse_allow_entries, run_lint)
 
 
@@ -332,3 +334,87 @@ def test_repo_allowlist_has_no_unexplained_suppressions():
     for e in entries:
         # a real justification, not a placeholder
         assert len(e.justification.split()) >= 4, e.raw
+
+
+# ---- clock-seam ------------------------------------------------------------------
+
+
+def test_clock_seam_flags_all_time_calls_including_monotonic(tmp_path):
+    (tmp_path / "inst.py").write_text(textwrap.dedent("""\
+        import time
+        import datetime
+        t0 = time.perf_counter()
+        now = time.time()
+        stamp = datetime.datetime.now()
+    """))
+    found = check_clock_seam(str(tmp_path), ["inst.py"])
+    assert _rules(found) == [("clock-seam", "datetime.now"),
+                             ("clock-seam", "time.perf_counter"),
+                             ("clock-seam", "time.time")]
+
+
+def test_clock_seam_flags_from_time_import_at_the_import(tmp_path):
+    (tmp_path / "inst.py").write_text(
+        "from time import perf_counter\nx = perf_counter()\n")
+    found = check_clock_seam(str(tmp_path), ["inst.py"])
+    assert _rules(found) == [("clock-seam", "time.perf_counter")]
+
+
+def test_clock_seam_clean_file_routing_through_the_seam(tmp_path):
+    (tmp_path / "inst.py").write_text(textwrap.dedent("""\
+        from repro.obs import clock
+        t0 = clock.perf_counter()
+        created = clock.unix_time()
+    """))
+    assert check_clock_seam(str(tmp_path), ["inst.py"]) == []
+
+
+def test_clock_seam_row_naming_missing_file_is_a_finding(tmp_path):
+    found = check_clock_seam(str(tmp_path), ["gone/nowhere.py"])
+    assert [f.rule for f in found] == ["clock-seam"]
+    assert found[0].path == "pyproject.toml"
+    assert "no such file" in found[0].message
+
+
+def test_clock_seam_checked_on_every_run_and_allowlistable(tmp_path):
+    (tmp_path / "inst.py").write_text("import time\nt = time.time()\n")
+    findings = run_lint(str(tmp_path), paths=[], allow_raw=[],
+                        boundaries={}, clock_seam=["inst.py"])
+    assert ("clock-seam", "time.time") in _rules(findings)
+    findings = run_lint(
+        str(tmp_path), paths=[],
+        allow_raw=["inst.py::clock-seam::time.time::"
+                   "transitional direct read while the seam lands"],
+        boundaries={}, clock_seam=["inst.py"])
+    assert findings == []
+
+
+def test_load_pyproject_clock_seam_reads_paths(tmp_path):
+    pj = tmp_path / "pyproject.toml"
+    pj.write_text(textwrap.dedent("""\
+        [tool.repro.lint]
+        allow = []
+
+        [tool.repro.lint.clock_seam]
+        # time flows through repro.obs.clock only
+        paths = [
+            "src/a.py",
+            "src/b.py",
+        ]
+
+        [tool.after]
+        x = 1
+    """))
+    assert load_pyproject_clock_seam(str(pj)) == ["src/a.py", "src/b.py"]
+    assert load_pyproject_clock_seam(str(tmp_path / "absent.toml")) == []
+
+
+def test_repo_clock_seam_table_pins_the_instrumented_modules():
+    paths = load_pyproject_clock_seam("pyproject.toml")
+    for rel in ("src/repro/search/session.py",
+                "src/repro/costmodel/evaluator.py",
+                "src/repro/core/population.py",
+                "src/repro/search/artifact.py"):
+        assert rel in paths, rel
+    # the seam itself must NOT be pinned against its own time.* reads
+    assert "src/repro/obs/clock.py" not in paths

@@ -1,0 +1,262 @@
+"""Telemetry against real searches: fixed-seed runs with telemetry on are
+bit-identical to telemetry off (winner mask, fitness history, unique-state
+counts, and the raw RNG draw sequence), observer hooks tick in order
+(telemetry record first, so progress callbacks already see it), budget and
+patience stop at the same generation either way, traced runs emit
+schema-valid JSONL whose generation-span count equals the session's
+generation count, and artifacts/CLI round-trip the embedded summary."""
+import json
+import os
+import random
+import subprocess
+import sys
+
+import pytest
+
+from repro.obs import validate_event
+from repro.obs.report import render_telemetry
+from repro.obs.traceview import read_trace
+from repro.search import ScheduleArtifact, SearchSession, SearchSpec, search
+from repro.serve import ArtifactStore, BatchScheduler
+
+FAST = {"preset": "fast", "generations": 6}
+
+
+def signature(art):
+    """Everything about a search trajectory that must not move."""
+    return (art.genome_mask, art.best_fitness, art.history,
+            art.evaluations, art.offspring_evaluated,
+            art.best.energy_pj, art.best.cycles)
+
+
+# ---- bit-identity -----------------------------------------------------------------
+
+def test_fixed_seed_search_bit_identical_with_telemetry(tmp_path):
+    base = dict(workload="mobilenet_v3", accelerator="simba", backend="ga",
+                seed=0, backend_config=dict(FAST))
+    off = search(**base)
+    on = search(**base, telemetry=True)
+    traced = SearchSession(SearchSpec(**base, telemetry=True),
+                          trace_path=str(tmp_path / "t.jsonl")).run()
+    assert signature(on) == signature(off)
+    assert signature(traced) == signature(off)
+    # telemetry on populates the artifact; off leaves it absent
+    assert off.telemetry is None
+    assert on.telemetry is not None
+    assert on.telemetry["steps"] == len(on.history)
+
+
+def test_env_trace_activates_without_touching_the_spec(tmp_path, monkeypatch):
+    spec = SearchSpec(workload="mobilenet_v3", accelerator="simba",
+                      backend="ga", seed=0, backend_config=dict(FAST))
+    monkeypatch.delenv("REPRO_TRACE", raising=False)
+    off = SearchSession(spec).run()
+    p = tmp_path / "env.jsonl"
+    monkeypatch.setenv("REPRO_TRACE", str(p))
+    traced = SearchSession(spec).run()
+    assert signature(traced) == signature(off)
+    assert read_trace(str(p)).valid
+    # the default-off spec serializes without the flag: store keys and
+    # canonical spec JSON are byte-identical to pre-telemetry builds
+    assert "telemetry" not in spec.to_dict()
+    assert traced.spec.to_json() == off.spec.to_json()
+
+
+class RecordingRandom(random.Random):
+    """Records every underlying draw (`random()` and `getrandbits()` feed
+    all derived methods: randrange, shuffle, sample, ...)."""
+
+    draws = None                           # class-level sink, swapped per run
+
+    def random(self):
+        v = super().random()
+        RecordingRandom.draws.append(v)
+        return v
+
+    def getrandbits(self, k):
+        v = super().getrandbits(k)
+        RecordingRandom.draws.append((k, v))
+        return v
+
+
+def test_rng_draw_sequence_identical_with_telemetry(monkeypatch, tmp_path):
+    monkeypatch.setattr(random, "Random", RecordingRandom)
+    base = dict(workload="mobilenet_v3", accelerator="simba", backend="ga",
+                seed=0, backend_config={"preset": "fast", "generations": 3})
+
+    def run_and_record(**kw):
+        RecordingRandom.draws = []
+        art = search(**base, **kw)
+        return art, RecordingRandom.draws
+
+    art_off, draws_off = run_and_record()
+    art_on, draws_on = run_and_record(telemetry=True)
+    assert draws_off, "the GA consumed no recorded randomness?"
+    assert draws_on == draws_off           # recording consumes no RNG
+    assert signature(art_on) == signature(art_off)
+
+
+# ---- observer ordering + stopping policy ------------------------------------------
+
+def test_progress_callback_already_sees_the_generation_record():
+    spec = SearchSpec(workload="mobilenet_v3", accelerator="simba",
+                      backend="ga", seed=0, backend_config=dict(FAST),
+                      telemetry=True)
+    session = SearchSession(spec)
+    ticks = []
+
+    def progress(p):
+        recs = session.telemetry.generations
+        ticks.append((p.step, len(recs), recs[-1]["step"],
+                      recs[-1]["best"]))
+
+    art = session.run(progress=progress)
+    assert len(ticks) == len(art.history)
+    for i, (step, n_recs, last_step, last_best) in enumerate(ticks):
+        # collector.on_step ran BEFORE this progress tick: step i's record
+        # is already the newest one, carrying this tick's best
+        assert n_recs == i + 1
+        assert last_step == step
+        assert last_best == art.history[i]
+    # the per-tick unique-state counts surface verbatim in the summary
+    assert art.telemetry["unique_states"][-1] == art.evaluations
+
+
+@pytest.mark.parametrize("stopper", [{"budget": 60}, {"patience": 2}])
+def test_budget_and_patience_stop_identically_on_and_off(stopper):
+    base = dict(workload="mobilenet_v3", accelerator="simba", backend="ga",
+                seed=0,
+                backend_config={"preset": "fast", "generations": 200},
+                **stopper)
+    off = search(**base)
+    on = search(**base, telemetry=True)
+    assert len(off.history) < 200          # the stopper actually cut the run
+    assert signature(on) == signature(off)
+    assert on.telemetry["steps"] == len(off.history)
+
+
+# ---- traced runs ------------------------------------------------------------------
+
+def test_traced_run_emits_schema_valid_spans_matching_history(tmp_path):
+    p = tmp_path / "run.jsonl"
+    spec = SearchSpec(workload="mobilenet_v3", accelerator="simba",
+                      backend="ga", seed=0, backend_config=dict(FAST))
+    art = SearchSession(spec, trace_path=str(p)).run()
+    with open(p) as f:
+        evs = [json.loads(line) for line in f]
+    assert evs and all(validate_event(e) == [] for e in evs)
+    rep = read_trace(str(p))
+    assert rep.valid
+    assert rep.span_counts["search"] == 1
+    assert rep.span_counts["generation"] == len(art.history)
+    assert rep.span_counts["batch_eval"] >= len(art.history)
+    assert rep.metrics["counters"]["eval.unique"] == art.evaluations
+    # every per-generation array in the embedded summary is |history| long
+    t = art.telemetry
+    assert t is not None and t["steps"] == len(art.history)
+    for key in ("best", "mean", "std", "rejection_rate", "group_hit_rate",
+                "unique_states", "offspring"):
+        assert len(t[key]) == len(art.history), key
+    assert t["best"] == [round(b, 6) for b in art.history]
+    assert t["cache"]["unique_groups"] > 0
+
+
+def test_artifact_round_trips_telemetry_and_report_renders(tmp_path):
+    art = search("mobilenet_v3", "simba", backend="ga", seed=0,
+                 backend_config=dict(FAST), telemetry=True)
+    again = ScheduleArtifact.from_json(art.to_json())
+    assert again.telemetry == art.telemetry
+    # the report renders from the embedded summary alone — no trace file
+    out = render_telemetry(again.telemetry)
+    assert f"{len(art.history)} steps" in out
+    assert f"{art.evaluations} unique states" in out
+    assert "unique_groups" in out
+
+
+def test_island_thread_mode_counts_barriers_and_migrations(tmp_path):
+    p = tmp_path / "island.jsonl"
+    spec = SearchSpec(
+        workload="mobilenet_v3", accelerator="simba", backend="island",
+        seed=0, telemetry=True,
+        backend_config={"preset": "fast", "generations": 7, "islands": 2,
+                        "migrate_every": 3, "workers": "thread"})
+    art = SearchSession(spec, trace_path=str(p)).run()
+    counters = art.telemetry["metrics"]["counters"]
+    # 7 generations / migrate_every=3 -> barriers after gens 3 and 6 (the
+    # final generation never barriers), both migrating
+    assert counters["island.barriers"] == 2
+    assert counters["island.migrations"] == 2
+    rep = read_trace(str(p))
+    assert rep.valid
+    assert rep.point_counts.get("island.migration") == 2
+
+
+# ---- serve + CLI ------------------------------------------------------------------
+
+def test_serve_scheduler_records_jobs_dedup_and_store_hits(tmp_path):
+    from repro.obs import TelemetryCollector, Tracer
+    p = tmp_path / "serve.jsonl"
+    store = ArtifactStore(str(tmp_path / "store"))
+    spec = SearchSpec(workload="vgg16", backend="ga",
+                      backend_config={"preset": "fast", "generations": 4})
+    col = TelemetryCollector(tracer=Tracer(str(p)))
+    sched = BatchScheduler(store, workers=1, obs=col)
+    sched.submit(spec)
+    sched.submit(SearchSpec.from_dict(spec.to_dict()))   # in-flight dup
+    out = sched.run()
+    assert out.stats["searched"] == 1 and out.stats["cache_hits"] == 1
+    col2 = TelemetryCollector(tracer=Tracer(str(p)))
+    again = BatchScheduler(store, workers=1, obs=col2)
+    again.submit(SearchSpec.from_dict(spec.to_dict()))   # pure store read
+    again.run()
+    col.close()
+    col2.close()
+    c1 = col.registry.snapshot()["counters"]
+    assert c1["serve.jobs{outcome=searched}"] == 1
+    assert c1["serve.jobs{outcome=cache_hit}"] == 1
+    assert c1["serve.deduped_in_flight"] == 1
+    assert c1["serve.store_misses"] == 1 and c1["serve.store_hits"] == 0
+    c2 = col2.registry.snapshot()["counters"]
+    assert c2["serve.store_hits"] == 1
+    rep = read_trace(str(p))
+    assert rep.valid
+    assert rep.point_counts["serve.job"] == 3
+    assert rep.span_counts["serve.batch"] == 2
+
+
+def test_cli_trace_report_round_trip(tmp_path):
+    art = tmp_path / "a.json"
+    trace = tmp_path / "t.jsonl"
+
+    env = {**os.environ, "PYTHONPATH": "src"}
+    env.pop("REPRO_TRACE", None)
+
+    def repro(*argv):
+        return subprocess.run(
+            [sys.executable, "-m", "repro", *argv], cwd="/root/repo",
+            capture_output=True, text=True, env=env)
+
+    r = repro("search", "--workload", "mobilenet_v3", "--accelerator",
+              "simba", "--backend", "ga", "--preset", "fast",
+              "--generations", "2", "--seed", "0", "--out", str(art),
+              "--trace", str(trace))
+    assert r.returncode == 0, r.stderr
+    r = repro("trace", str(trace), "--json")
+    assert r.returncode == 0, r.stderr
+    agg = json.loads(r.stdout)
+    saved = json.loads(art.read_text())
+    assert agg["valid"]
+    assert agg["span_counts"]["generation"] == len(saved["history"])
+    assert len(saved["telemetry"]["best"]) == len(saved["history"])
+    r = repro("report", str(art), "--telemetry")
+    assert r.returncode == 0, r.stderr
+    assert "telemetry" in r.stdout and "convergence" in r.stdout
+    # --telemetry on an untraced artifact is a loud error, not silence
+    plain = tmp_path / "plain.json"
+    r = repro("search", "--workload", "mobilenet_v3", "--backend", "ga",
+              "--preset", "fast", "--generations", "2", "--seed", "0",
+              "--out", str(plain))
+    assert r.returncode == 0, r.stderr
+    r = repro("report", str(plain), "--telemetry")
+    assert r.returncode == 2
+    assert "carries no telemetry summary" in r.stderr
