@@ -26,7 +26,7 @@ def main() -> None:
     from benchmarks import (fig7_receptive_field, fig9_resnet50_groups,
                             fig10_workloads, fig11_repartition,
                             ga_convergence, island_scaling, kernel_bench,
-                            roofline_table, tpu_schedule_bench)
+                            roofline_table, serve_load, tpu_schedule_bench)
     suites = {
         "fig7": fig7_receptive_field,
         "fig9": fig9_resnet50_groups,
@@ -36,6 +36,7 @@ def main() -> None:
         "island": island_scaling,
         "kernels": kernel_bench,
         "roofline": roofline_table,
+        "serve": serve_load,
         "tpu_ga": tpu_schedule_bench,
     }
     selected = [s.strip() for s in args.only.split(",") if s.strip()] \

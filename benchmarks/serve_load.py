@@ -1,0 +1,128 @@
+"""Daemon load benchmark: 1k+ mixed-spec jobs over the real HTTP socket.
+
+Starts a :class:`repro.serve.daemon.ScheduleDaemon` on a loopback port,
+warms the store by searching each unique spec once, then submits 1k+
+jobs drawn round-robin from the spec mix and polls them all to terminal
+state.  Emits the service's headline numbers: sustained jobs/sec over the
+whole run, p50/p99 POST /jobs latency (the client-visible cost of a
+submission — store hits resolve inside the POST), and the store hit rate.
+
+The spec mix is deliberately cache-heavy (every spec repeats many times):
+the daemon's design point is that repeat traffic is a read, so the
+benchmark measures the serving path, not GA throughput — that is
+``ga_convergence``/``island_scaling``'s job.
+
+Save a run as ``BENCH_serve.json`` (``--json``) to serve as the serving
+baseline; CI compares ``serve_load:jobs_per_sec`` warn-only (machine-local
+HTTP latency is noisy across runners).
+"""
+from __future__ import annotations
+
+import json
+import time
+import urllib.request
+
+from repro.search import SearchSpec
+from repro.serve.daemon import ScheduleDaemon
+
+from benchmarks.common import emit, record
+
+#: unique specs in the mix: 4 registry workloads x 2 seeds
+WORKLOADS = ("mobilenet_v3", "resnet50", "unet", "vgg16")
+SEEDS = (0, 1)
+
+
+def _spec_mix(generations: int):
+    return [SearchSpec(workload=w, seed=s,
+                       backend_config={"preset": "fast",
+                                       "generations": generations}).to_dict()
+            for w in WORKLOADS for s in SEEDS]
+
+
+def _post_job(base: str, spec_dict: dict) -> dict:
+    req = urllib.request.Request(
+        base + "/jobs", data=json.dumps({"spec": spec_dict}).encode())
+    with urllib.request.urlopen(req, timeout=60) as r:
+        return json.load(r)
+
+
+def _get(base: str, path: str) -> dict:
+    with urllib.request.urlopen(base + path, timeout=60) as r:
+        return json.load(r)
+
+
+def _percentile(sorted_vals, q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
+    return sorted_vals[idx]
+
+
+def run(full: bool = False):
+    n_jobs = 4096 if full else 1024
+    generations = 8 if full else 4
+    mix = _spec_mix(generations)
+
+    import tempfile
+    with tempfile.TemporaryDirectory(prefix="repro-serve-bench-") as tmp:
+        svc = ScheduleDaemon(tmp, workers=2)
+        svc.start()
+        base = f"http://127.0.0.1:{svc.port}"
+        try:
+            t0 = time.perf_counter()
+            # warm phase: one genuine search per unique spec
+            warm_ids = [_post_job(base, sd)["id"] for sd in mix]
+            _drain(base, warm_ids)
+            warm_s = time.perf_counter() - t0
+
+            lat = []
+            ids = []
+            t1 = time.perf_counter()
+            for i in range(n_jobs):
+                s0 = time.perf_counter()
+                ids.append(_post_job(base, mix[i % len(mix)])["id"])
+                lat.append(time.perf_counter() - s0)
+            _drain(base, ids)
+            serve_s = time.perf_counter() - t1
+
+            m = _get(base, "/metrics")
+        finally:
+            svc.stop()
+
+    lat.sort()
+    p50_ms = _percentile(lat, 0.50) * 1e3
+    p99_ms = _percentile(lat, 0.99) * 1e3
+    jobs_per_sec = n_jobs / serve_s if serve_s > 0 else 0.0
+    total = n_jobs + len(mix)
+    hit_rate = svc.store_hits / total if total else 0.0
+
+    emit("serve_load", serve_s * 1e6 / n_jobs,
+         f"jobs_per_sec={jobs_per_sec:.0f};p50_ms={p50_ms:.2f};"
+         f"p99_ms={p99_ms:.2f};hit_rate={hit_rate:.3f}")
+    record("serve_load",
+           jobs=n_jobs, unique_specs=len(mix), generations=generations,
+           workers=2,
+           jobs_per_sec=round(jobs_per_sec, 1),
+           p50_ms=round(p50_ms, 3), p99_ms=round(p99_ms, 3),
+           hit_rate=round(hit_rate, 4),
+           searches=svc.searches_run, store_hits=svc.store_hits,
+           warm_s=round(warm_s, 3), serve_s=round(serve_s, 3),
+           done=m["jobs"]["done"], failed=m["jobs"]["failed"])
+
+
+def _drain(base: str, ids, timeout: float = 600.0) -> None:
+    """Poll until every job id is terminal (done/failed/cancelled)."""
+    deadline = time.monotonic() + timeout
+    pending = list(ids)
+    while pending:
+        if time.monotonic() > deadline:
+            raise RuntimeError(f"{len(pending)} job(s) never resolved")
+        j = _get(base, f"/jobs/{pending[-1]}")
+        if j["state"] in ("done", "failed", "cancelled"):
+            pending.pop()
+        else:
+            time.sleep(0.02)
+
+
+if __name__ == "__main__":
+    run()

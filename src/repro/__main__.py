@@ -6,6 +6,10 @@ registries, export workload IR.
     repro search --workload file:model.json --backend ga   # bring your own
     repro submit --store schedules/ --workload mobilenet_v3 --backend island
     repro serve --store schedules/ --requests jobs.json --workers 4
+    repro daemon --store schedules/ --port 8765 --workers 2
+    repro jobs submit --workload vgg16 --wait [--warm-start] [--priority 5]
+    repro jobs status 3 | repro jobs cancel 3 | repro jobs list
+    repro store gc --store schedules/ --max-objects 500 [--dry-run]
     repro report artifact.json [--schedule] [--history]
     repro verify artifact.json | repro verify --store schedules/
     repro analyze mobilenet_v3 --accel simba [--json]
@@ -150,6 +154,76 @@ def _add_serve_parser(sub) -> None:
                         "(default 1 = inline)")
     p.add_argument("--json", action="store_true",
                    help="emit per-job outcomes + stats as JSON")
+
+
+def _add_daemon_parser(sub) -> None:
+    p = sub.add_parser(
+        "daemon", help="run the always-on scheduling service: HTTP/JSON "
+                       "API over a crash-safe persistent job queue "
+                       "(journal replayed on restart) and the schedule "
+                       "store")
+    p.add_argument("--store", required=True,
+                   help="ArtifactStore directory (created if absent; also "
+                        "holds the queue journal)")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=8765,
+                   help="listen port (0 = pick a free one; default 8765)")
+    p.add_argument("--workers", type=int, default=1,
+                   help="worker threads draining the queue (default 1)")
+
+
+def _add_jobs_parser(sub) -> None:
+    p = sub.add_parser(
+        "jobs", help="talk to a running `repro daemon`: submit / list / "
+                     "status / wait / cancel")
+    p.add_argument("--daemon", default="http://127.0.0.1:8765",
+                   metavar="URL", help="daemon base URL "
+                                       "(default http://127.0.0.1:8765)")
+    js = p.add_subparsers(dest="jobs_command", required=True)
+    ps = js.add_parser("submit", help="submit one search job")
+    _add_spec_args(ps)
+    ps.add_argument("--priority", type=int, default=0,
+                    help="higher runs first (default 0)")
+    ps.add_argument("--warm-start", action="store_true",
+                    help="seed the GA population from the store's nearest "
+                         "cached winner (opt-in; never changes the store "
+                         "key)")
+    ps.add_argument("--wait", action="store_true",
+                    help="poll until the job resolves")
+    ps.add_argument("--json", action="store_true")
+    pl = js.add_parser("list", help="list every job the daemon knows")
+    pl.add_argument("--json", action="store_true")
+    pt = js.add_parser("status", help="one job's state + live progress")
+    pt.add_argument("id", type=int)
+    pt.add_argument("--json", action="store_true")
+    pw = js.add_parser("wait", help="block until a job resolves")
+    pw.add_argument("id", type=int)
+    pw.add_argument("--timeout", type=float, default=600.0,
+                    help="give up after this many seconds (default 600)")
+    pw.add_argument("--json", action="store_true")
+    pc = js.add_parser("cancel", help="cancel a job (cooperative abort "
+                                      "when already running)")
+    pc.add_argument("id", type=int)
+    pc.add_argument("--json", action="store_true")
+
+
+def _add_store_parser(sub) -> None:
+    p = sub.add_parser(
+        "store", help="schedule-store maintenance (gc)")
+    ss = p.add_subparsers(dest="store_command", required=True)
+    pg = ss.add_parser(
+        "gc", help="evict least-recently-used objects down to the given "
+                   "limits; never touches objects pinned by queued/running "
+                   "daemon jobs; corrupt objects are reported, not deleted")
+    pg.add_argument("--store", required=True,
+                    help="ArtifactStore directory")
+    pg.add_argument("--max-objects", type=int, default=None,
+                    help="keep at most this many objects")
+    pg.add_argument("--max-bytes", type=int, default=None,
+                    help="keep at most this many bytes of objects")
+    pg.add_argument("--dry-run", action="store_true",
+                    help="report what would be evicted without deleting")
+    pg.add_argument("--json", action="store_true")
 
 
 def _add_report_parser(sub) -> None:
@@ -333,6 +407,146 @@ def _cmd_serve(args) -> int:
               f"({s['deduped_in_flight']} deduped in-flight), "
               f"{s['failed']} failed; store holds {len(store)} schedules")
     return 1 if outcome.stats["failed"] else 0
+
+
+def _cmd_daemon(args) -> int:
+    import signal
+
+    from repro.serve import ScheduleDaemon
+
+    svc = ScheduleDaemon(args.store, host=args.host, port=args.port,
+                         workers=args.workers)
+    rep = svc.queue.replay
+    if rep.jobs:
+        print(f"journal replay: {rep.jobs} job(s) — {rep.requeued} "
+              f"requeued, {rep.terminal} already resolved")
+    for w in rep.warnings:
+        print(f"  journal warning: {w}", file=sys.stderr)
+    for signum in (signal.SIGTERM, signal.SIGINT):
+        signal.signal(signum, lambda s, f: svc.request_shutdown())
+    svc.start()
+    print(f"repro daemon listening on http://{svc.host}:{svc.port} "
+          f"(store {args.store}, {args.workers} worker(s))", flush=True)
+    svc.wait()
+    print("daemon stopped")
+    return 0
+
+
+def _http_json(method: str, url: str, payload=None, timeout: float = 60.0):
+    """One JSON request against the daemon; HTTP/connection errors become
+    ValueError so main() renders them as `error: ...` with exit 2."""
+    import urllib.error
+    import urllib.request
+
+    data = json.dumps(payload).encode() if payload is not None else None
+    req = urllib.request.Request(url, data=data, method=method)
+    if data is not None:
+        req.add_header("Content-Type", "application/json")
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as resp:
+            return json.load(resp)
+    except urllib.error.HTTPError as e:
+        body = e.read().decode(errors="replace")
+        try:
+            msg = json.loads(body).get("error", body)
+        except json.JSONDecodeError:
+            msg = body
+        raise ValueError(f"daemon returned {e.code}: {msg}") from None
+    except urllib.error.URLError as e:
+        raise ValueError(f"cannot reach daemon at {url}: {e.reason}") \
+            from None
+
+
+def _job_line(j: dict) -> str:
+    spec = j.get("spec", {})
+    tail = ""
+    if j.get("outcome"):
+        tail += f" outcome={j['outcome']}"
+    if j.get("error"):
+        tail += f" error={j['error']}"
+    if j.get("key"):
+        tail += f" key={j['key'][:12]}"
+    prog = j.get("progress") or []
+    if prog and j.get("state") == "running":
+        tail += (f" [gen {prog[-1]['step']}, "
+                 f"best {prog[-1]['best']:.4f}]")
+    return (f"job {j['id']}: {spec.get('workload')}/"
+            f"{spec.get('accelerator')} [{spec.get('backend')}, seed "
+            f"{spec.get('seed')}] state={j['state']}{tail}")
+
+
+def _wait_job(base: str, job_id: int, timeout: float) -> dict:
+    import time
+
+    deadline = time.monotonic() + timeout
+    while True:
+        j = _http_json("GET", f"{base}/jobs/{job_id}")
+        if j["state"] in ("done", "failed", "cancelled"):
+            return j
+        if time.monotonic() >= deadline:
+            raise ValueError(f"timed out after {timeout:.0f}s waiting for "
+                             f"job {job_id} (state {j['state']})")
+        time.sleep(0.2)
+
+
+def _cmd_jobs(args) -> int:
+    base = args.daemon.rstrip("/")
+    cmd = args.jobs_command
+    if cmd == "submit":
+        spec = _spec_from_args(args)
+        job = _http_json("POST", f"{base}/jobs",
+                         {"spec": spec.to_dict(), "priority": args.priority,
+                          "warm_start": args.warm_start})
+        if args.wait and job["state"] not in ("done", "failed", "cancelled"):
+            job = _wait_job(base, job["id"], timeout=600.0)
+        print(json.dumps(job, indent=2, sort_keys=True) if args.json
+              else _job_line(job))
+        return 2 if job["state"] == "failed" else 0
+    if cmd == "list":
+        jobs = _http_json("GET", f"{base}/jobs")["jobs"]
+        if args.json:
+            print(json.dumps(jobs, indent=2, sort_keys=True))
+        else:
+            for j in jobs:
+                print(_job_line(j))
+            print(f"{len(jobs)} job(s)")
+        return 0
+    if cmd == "status":
+        j = _http_json("GET", f"{base}/jobs/{args.id}")
+    elif cmd == "wait":
+        j = _wait_job(base, args.id, timeout=args.timeout)
+    else:                                # cancel
+        j = _http_json("DELETE", f"{base}/jobs/{args.id}")
+        print(json.dumps(j, indent=2, sort_keys=True) if args.json
+              else f"job {j['id']}: {j['state']}")
+        return 0
+    print(json.dumps(j, indent=2, sort_keys=True) if args.json
+          else _job_line(j))
+    return 2 if j["state"] == "failed" else 0
+
+
+def _cmd_store(args) -> int:
+    from repro.serve import ArtifactStore, collect_garbage
+
+    store = ArtifactStore(args.store, create=False)
+    res = collect_garbage(store, max_objects=args.max_objects,
+                          max_bytes=args.max_bytes, dry_run=args.dry_run)
+    if args.json:
+        print(json.dumps(res.to_dict(), indent=2, sort_keys=True))
+        return 0
+    d = res.to_dict()
+    verb = "would evict" if res.dry_run else "evicted"
+    print(f"store gc: {res.examined} object(s), {res.bytes_total} bytes — "
+          f"{verb} {len(res.evicted)} ({res.evicted_bytes} bytes), "
+          f"{d['objects_after']} object(s) / {d['bytes_after']} bytes "
+          f"remain")
+    if res.kept_live:
+        print(f"  pinned by queued/running jobs: "
+              f"{len(res.kept_live)} object(s)")
+    for key in res.corrupt:
+        print(f"  warning: corrupt/unreadable object {key[:12]} "
+              f"(reported, not deleted)", file=sys.stderr)
+    return 0
 
 
 def _cmd_report(args) -> int:
@@ -617,6 +831,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     _add_search_parser(sub)
     _add_submit_parser(sub)
     _add_serve_parser(sub)
+    _add_daemon_parser(sub)
+    _add_jobs_parser(sub)
+    _add_store_parser(sub)
     _add_report_parser(sub)
     _add_verify_parser(sub)
     _add_analyze_parser(sub)
@@ -639,7 +856,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     from repro.search import BackendError, FingerprintMismatch, RegistryError
     from repro.serve import StoreError
     handler = {"search": _cmd_search, "submit": _cmd_submit,
-               "serve": _cmd_serve, "report": _cmd_report,
+               "serve": _cmd_serve, "daemon": _cmd_daemon,
+               "jobs": _cmd_jobs, "store": _cmd_store,
+               "report": _cmd_report,
                "verify": _cmd_verify, "analyze": _cmd_analyze,
                "trace": _cmd_trace, "lint": _cmd_lint,
                "export": _cmd_export, "list": _cmd_list}[args.command]

@@ -169,8 +169,20 @@ def run_ga_problem(problem: SearchProblem, config: GAConfig = GAConfig(),
             fit_cache.update(zip(fresh, fits))
         return [fit_cache[k] for k in keys]
 
+    # warm-start seeding (repro.serve.warmstart): extra genomes scored into
+    # the initial pool alongside the canonical start.  With no seeds (the
+    # default) the pool is exactly ``[initial]`` and every subsequent RNG
+    # draw is bit-identical to the unseeded loop; seeds widen the first
+    # generation's parent-index range, which is why seeding is opt-in.
     init = problem.initial()
-    pool: List[Tuple[float, object]] = list(zip(score([init]), [init]))
+    starters: List = [init]
+    seen_keys = {pkey(init)}
+    for seed_genome in getattr(problem, "seed_genomes", ()) or ():
+        k = pkey(seed_genome)
+        if k not in seen_keys:
+            seen_keys.add(k)
+            starters.append(seed_genome)
+    pool: List[Tuple[float, object]] = list(zip(score(starters), starters))
     history: List[float] = []
 
     for gen in range(config.generations):

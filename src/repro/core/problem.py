@@ -49,6 +49,14 @@ class SearchProblem:
     #: short name used in artifacts/reports
     name: str = "problem"
 
+    #: extra genomes scored into the GA's initial pool alongside
+    #: :meth:`initial` (warm-start seeding, ``repro.serve.warmstart``).
+    #: Duplicates of the initial genome are dropped.  Empty by default so
+    #: every existing fixed-seed trajectory stays bit-identical — a non-empty
+    #: tuple widens the first generation's parent pool and therefore its RNG
+    #: draw widths, which is why callers must opt in explicitly.
+    seed_genomes: Tuple[Any, ...] = ()
+
     # ---- required surface -----------------------------------------------------
     def initial(self) -> Any:
         """The search's starting genome (the paper's layerwise schedule)."""

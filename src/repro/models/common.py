@@ -24,12 +24,39 @@ import threading
 
 _MESH_TLS = threading.local()
 
+_RNG_FLAG_DONE = False
+
+
+def ensure_sharding_invariant_rng() -> None:
+    """Make ``jax.random`` draws identical under any ``out_shardings``.
+
+    On jax 0.4.x ``jax_threefry_partitionable`` defaults to False, and the
+    legacy threefry lowering produces *different* values when the same
+    ``jax.random.normal`` is jitted with sharded vs replicated output
+    (observed on jax 0.4.37: param init under ``out_shardings=P("model",
+    None)`` diverges from the unsharded init by O(1), which then makes
+    sharded-vs-single training losses drift ~5%).  The partitionable
+    threefry lowering is value-identical across shardings (and became the
+    default in jax 0.5); enabling it here — version-aware, once — restores
+    the invariant every mesh-parameterized test relies on.
+    """
+    global _RNG_FLAG_DONE
+    if _RNG_FLAG_DONE:
+        return
+    _RNG_FLAG_DONE = True
+    try:
+        if not jax.config.jax_threefry_partitionable:
+            jax.config.update("jax_threefry_partitionable", True)
+    except AttributeError:
+        pass                 # flag removed (always-on) in newer jax
+
 
 @contextlib.contextmanager
 def use_mesh(mesh):
     """Enter ``mesh`` both as the JAX mesh context and for our logical-axis
     resolution.  All launchers/tests use this instead of a bare ``with mesh``.
     """
+    ensure_sharding_invariant_rng()
     prev = getattr(_MESH_TLS, "mesh", None)
     _MESH_TLS.mesh = mesh
     try:

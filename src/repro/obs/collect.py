@@ -240,6 +240,16 @@ class TelemetryCollector:
                    **({"cache": dict(cache_stats)} if cache_stats else {})})
         self._search_id = None
 
+    def progress_records(self) -> List[Dict[str, Any]]:
+        """JSON-safe snapshot of the per-generation convergence records, in
+        tick order — what ``repro.serve.daemon`` serves from ``GET
+        /jobs/<id>`` while a search is still running.  Floats are rounded
+        like trace attributes; the snapshot copies the record list first so
+        a concurrent ``on_step`` append never tears the serialization."""
+        return [{k: (_r6(v) if isinstance(v, float) else v)
+                 for k, v in rec.items()}
+                for rec in list(self.generations)]
+
     def summary(self, cache_stats: Optional[Dict[str, Any]] = None
                 ) -> Dict[str, Any]:
         """The compact per-run summary artifacts embed (``repro report

@@ -67,11 +67,18 @@ class SearchSession:
                  accelerator: Optional[Accelerator] = None,
                  em: Optional[EnergyModel] = None,
                  embed_ir: Optional[bool] = None,
-                 trace_path: Optional[str] = None):
+                 trace_path: Optional[str] = None,
+                 obs: Optional[TelemetryCollector] = None):
         self.spec = spec
         # JSONL span destination (CLI --trace); REPRO_TRACE is the env
         # fallback, checked at run() so tests can set it per-run
         self.trace_path = trace_path
+        # externally-owned collector (repro.serve.daemon): the session
+        # attaches it for the run so callers can stream per-generation
+        # records live, but does NOT embed its summary in the artifact
+        # unless the spec itself asks for telemetry — daemon-produced
+        # artifacts stay byte-compatible with direct SearchSession runs
+        self._external_obs = obs
         self.telemetry: Optional[TelemetryCollector] = None
         # artifacts for workloads with no registry entry (file: documents,
         # direct graphs recorded as ir:<fingerprint>) embed the canonical
@@ -145,12 +152,18 @@ class SearchSession:
     def _telemetry_setup(self) -> Tuple[Optional[TelemetryCollector],
                                         Optional[Tracer]]:
         """Build and attach the collector when telemetry is on; (None, None)
-        otherwise — the disabled path allocates nothing."""
-        path = self.trace_path or trace_path_from_env()
-        if not (self.spec.telemetry or path):
-            return None, None
-        tracer = Tracer(path) if path else None
-        collector = TelemetryCollector(tracer=tracer)
+        otherwise — the disabled path allocates nothing.  An external
+        collector (``obs=``) is attached as-is: the session never owns its
+        tracer and tracing env/args are ignored for the run."""
+        tracer: Optional[Tracer] = None
+        if self._external_obs is not None:
+            collector = self._external_obs
+        else:
+            path = self.trace_path or trace_path_from_env()
+            if not (self.spec.telemetry or path):
+                return None, None
+            tracer = Tracer(path) if path else None
+            collector = TelemetryCollector(tracer=tracer)
         self.evaluator.attach_telemetry(collector)
         # island workers reach the collector via the problem they fork with
         self.problem.obs = collector
@@ -220,7 +233,11 @@ class SearchSession:
             collector.end_search(stats)
             if tracer is not None:
                 tracer.close()
-            telemetry = collector.summary(stats)
+            # external collectors record for their owner (the daemon); the
+            # artifact embeds a summary only when the spec opted in, so a
+            # daemon-run artifact is byte-identical to a direct run's
+            if self._external_obs is None or self.spec.telemetry:
+                telemetry = collector.summary(stats)
         self.artifact = make_artifact(
             self.spec, self.graph, self.result,
             baseline=self.evaluator.layerwise(), best=best_cost,

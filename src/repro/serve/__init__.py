@@ -10,7 +10,13 @@ across requests:
 * :mod:`repro.serve.scheduler` — a :class:`BatchScheduler` that dedups
   in-flight identical specs, serves store hits without searching, and fans
   misses out across a worker pool;
-* the CLI verbs ``repro serve --requests jobs.json`` and ``repro submit``
+* :mod:`repro.serve.daemon` — the always-on service: HTTP/JSON API over a
+  crash-safe persistent priority queue (:mod:`repro.serve.queue`) with
+  opt-in warm-started searches (:mod:`repro.serve.warmstart`);
+* :mod:`repro.serve.gc` — LRU-by-access store eviction that never touches
+  objects pinned by queued/running jobs;
+* the CLI verbs ``repro serve --requests jobs.json``, ``repro submit``,
+  ``repro daemon``, ``repro jobs``, and ``repro store gc``
   (see ``repro.__main__``).
 
     from repro.serve import ArtifactStore, BatchScheduler
@@ -20,11 +26,19 @@ across requests:
         sched.submit(spec)
     outcome = sched.run()       # outcome.stats: searched / cache_hits / ...
 """
+from repro.serve.daemon import DaemonError, JobCancelled, ScheduleDaemon
+from repro.serve.gc import GCResult, collect_garbage, live_keys_for_store
+from repro.serve.queue import JobQueue, QueuedJob, QueueError
 from repro.serve.scheduler import BatchScheduler, Job, ServeOutcome
 from repro.serve.store import (ArtifactStore, StoreError, artifact_key,
                                spec_hash)
+from repro.serve.warmstart import WarmStartSeed, find_warm_start
 
 __all__ = [
     "ArtifactStore", "BatchScheduler", "Job", "ServeOutcome", "StoreError",
     "artifact_key", "spec_hash",
+    "ScheduleDaemon", "DaemonError", "JobCancelled",
+    "JobQueue", "QueuedJob", "QueueError",
+    "GCResult", "collect_garbage", "live_keys_for_store",
+    "WarmStartSeed", "find_warm_start",
 ]

@@ -147,6 +147,14 @@ class ArtifactStore:
                 f"fingerprint {graph_fingerprint}, spec {spec.to_dict()}); "
                 f"the object was corrupted or hand-edited")
         self.hits += 1
+        # LRU access clock for ``repro store gc``: a served hit refreshes
+        # the object's mtime so eviction age means "time since last use",
+        # not "time since creation"; best-effort (read-only stores still
+        # serve)
+        try:
+            os.utime(self.path_for(key))
+        except OSError:
+            pass
         return art
 
     def load_key(self, key: str) -> Optional[ScheduleArtifact]:

@@ -98,14 +98,12 @@ def test_microbatched_matches_full_batch():
                                out2["history"]["loss"], rtol=2e-4, atol=2e-4)
 
 
-_SHARDED_NUMERICS_XFAIL = pytest.mark.xfail(
-    strict=False,
-    reason="jax 0.4.37 sharded-numerics drift: sharded loss diverges ~5% "
-           "from single-device; needs a jax-version-aware sharding audit in "
-           "repro/models/common.py / repro/launch (see ROADMAP.md)")
-
-
-@_SHARDED_NUMERICS_XFAIL
+# (Formerly xfailed on jax 0.4.37: the legacy non-partitionable threefry
+# lowering made `jax.random` param init differ under sharded out_shardings,
+# so sharded losses drifted ~5% from single-device.  Root cause audited and
+# fixed: repro.models.common.use_mesh now enables
+# jax_threefry_partitionable, version-aware — see
+# ensure_sharding_invariant_rng().)
 def test_sharded_training_matches_single_device():
     """DP(2) x TP(4) on 8 fake CPU devices == single device (subprocess so
     the device-count flag never leaks into this test process)."""
@@ -119,7 +117,6 @@ def test_sharded_training_matches_single_device():
         f"stdout:\n{res.stdout}\nstderr:\n{res.stderr[-3000:]}"
 
 
-@_SHARDED_NUMERICS_XFAIL
 def test_elastic_remesh_restore_on_different_topology():
     """Crash on a (2,4) mesh, resume the same run on (4,2), match the
     uninterrupted oracle — checkpoints are mesh-agnostic (elastic scaling)."""
